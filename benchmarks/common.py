@@ -1,0 +1,67 @@
+"""Shared helpers for the paper-table benchmarks (CPU-scaled).
+
+Every benchmark prints ``name,value,...`` CSV rows under a section header so
+bench_output.txt is grep-able; sizes are scaled to the container's single CPU
+core (the paper used n up to 5e5 on a Xeon — same asymptotics, smaller n).
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kde as core_kde
+from repro.core import kernels as K
+from repro.core import krr, leverage, nystrom, rls
+from repro.data import krr_data
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def section(title: str) -> None:
+    print(f"\n## {title}")
+
+
+def leverage_probs(method: str, key, kernel, data, lam: float, d: int):
+    """(probs, seconds) for one leverage-approximation method."""
+    n = data.x.shape[0]
+    if method == "vanilla":
+        return jnp.full((n,), 1.0 / n), 0.0
+    if method == "sa":
+        t0 = time.perf_counter()
+        dens = core_kde.estimate_densities(data.x)
+        sa = leverage.sa_leverage(dens, lam, kernel, d, n=n)
+        jax.block_until_ready(sa.probs)
+        return sa.probs, time.perf_counter() - t0
+    if method == "sa_grid":
+        t0 = time.perf_counter()
+        dens = core_kde.estimate_densities(data.x)
+        sa = leverage.sa_leverage(dens, lam, kernel, d, n=n, method="grid")
+        jax.block_until_ready(sa.probs)
+        return sa.probs, time.perf_counter() - t0
+    if method == "rc":
+        t0 = time.perf_counter()
+        r = rls.recursive_rls(kernel, data.x, lam, seed=int(key[-1]))
+        jax.block_until_ready(r.probs)
+        return r.probs, time.perf_counter() - t0
+    if method == "bless":
+        t0 = time.perf_counter()
+        r = rls.bless(kernel, data.x, lam, seed=int(key[-1]))
+        jax.block_until_ready(r.probs)
+        return r.probs, time.perf_counter() - t0
+    raise ValueError(method)
+
+
+def nystrom_error(key, kernel, data, lam: float, probs, m: int) -> float:
+    fit = nystrom.fit(key, kernel, data.x, data.y, lam, m, probs)
+    pred = nystrom.fitted(kernel, fit, data.x)
+    return float(krr.in_sample_risk(pred, data.f_star))

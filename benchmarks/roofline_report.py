@@ -1,0 +1,41 @@
+"""Roofline report: aggregates results/dryrun/*.json into the per-(arch x
+shape x mesh) three-term table (see EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline import analysis as roofline
+
+
+def load(out_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            rows.append(rec)
+    return rows
+
+
+def main() -> None:
+    rows = load()
+    print("\n## roofline: per-cell three-term analysis (from dry-run)")
+    if not rows:
+        print("(no dry-run artifacts under results/dryrun — run "
+              "`python -m repro.launch.dryrun --all --mesh both` first)")
+        return
+    print(roofline.fmt_table(rows))
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    coll = max(rows, key=lambda r: r["t_collective"] /
+               max(r["t_compute"] + r["t_memory"] + r["t_collective"], 1e-30))
+    print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"[{worst['mesh']}] at {100*worst['roofline_fraction']:.1f}%")
+    print(f"most collective-bound:  {coll['arch']} x {coll['shape']} "
+          f"[{coll['mesh']}] t_coll={coll['t_collective']:.3e}s")
+
+
+if __name__ == "__main__":
+    main()

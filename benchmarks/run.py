@@ -1,0 +1,36 @@
+"""Run every paper-table benchmark + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run            # all sections
+  PYTHONPATH=src python -m benchmarks.run --only fig1
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (fig1_tradeoff, fig2_curves, fig3_gaussian,
+                        roofline_report, table1_racc)
+
+SECTIONS = {
+    "fig1": fig1_tradeoff.main,
+    "table1": table1_racc.main,
+    "fig2": fig2_curves.main,
+    "fig3": fig3_gaussian.main,
+    "roofline": roofline_report.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(SECTIONS))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SECTIONS)
+    for name in names:
+        t0 = time.perf_counter()
+        SECTIONS[name]()
+        print(f"[{name} done in {time.perf_counter() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from results/dryrun.
+
+Replaces the block between <!-- ROOFLINE-TABLE --> and the following blank
+'Reading of the baselines' paragraph marker with a markdown table (single-pod
+rows first, then multi-pod, optimized '+' rows inline).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+
+ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob("results/dryrun/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        out.append(r)
+    out.sort(key=lambda r: (r["mesh"] != "single", r["arch"],
+                            ORDER.get(r["shape"], 9)))
+    return out
+
+
+def fmt(rs):
+    lines = [
+        "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | bound "
+        "| useful | roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.3e} | {r['t_memory']:.3e} "
+            f"| {r['t_collective']:.3e} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {100*r['roofline_fraction']:.1f}% |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rs = rows()
+    table = fmt(rs)
+    text = open("EXPERIMENTS.md").read()
+    marker = "<!-- ROOFLINE-TABLE -->"
+    start = text.index(marker)
+    end = text.index("\nReading of the baselines", start)
+    text = text[:start] + marker + "\n\n" + table + "\n" + text[end:]
+    open("EXPERIMENTS.md", "w").write(text)
+    print(f"embedded {len(rs)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Architecture registry: --arch <id> -> ModelConfig (full or smoke).
+
+The 10 assigned architectures (each with its exact published geometry) plus
+the paper's own KRR experiment configs (paper_krr).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import (LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+                                 DECODE_32K, ModelConfig, ShapeSpec,
+                                 supports_shape)
+
+_MODULES = {
+    "mamba2-130m": "mamba2_130m",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "llama3.2-1b": "llama3_2_1b",
+    "stablelm-12b": "stablelm_12b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "musicgen-large": "musicgen_large",
+    "zamba2-7b": "zamba2_7b",
+    "llava-next-34b": "llava_next_34b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str, **overrides) -> ModelConfig:
+    cfg = _module(name).CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke(name: str, **overrides) -> ModelConfig:
+    cfg = _module(name).SMOKE
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def cells(include_skips: bool = False):
+    """All assigned (arch, shape) dry-run cells; skipped ones annotated."""
+    out = []
+    for arch in ARCHS:
+        cfg = get(arch)
+        for shape in SHAPES.values():
+            ok, reason = supports_shape(cfg, shape)
+            if ok or include_skips:
+                out.append((arch, shape.name, ok, reason))
+    return out

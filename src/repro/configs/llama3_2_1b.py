@@ -1,0 +1,13 @@
+"""llama3.2-1b — small llama3 dense GQA.  [hf:meta-llama/Llama-3.2-1B]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b", family="dense", num_layers=16, d_model=2048,
+    n_heads=32, n_kv_heads=8, head_dim=64, d_ff=8192, vocab_size=128_256,
+    rope_theta=500_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="llama3.2-1b-smoke", family="dense", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+)

@@ -1,0 +1,15 @@
+"""llava-next-34b — VLM transformer BACKBONE only; the anyres vision tower is
+a STUB: input_specs() feeds precomputed patch embeddings.  [hf:llava-v1.6-34b]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="dense", num_layers=60, d_model=7168,
+    n_heads=56, n_kv_heads=8, head_dim=128, d_ff=20_480, vocab_size=64_000,
+    inputs_embeds=True, tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="llava-next-34b-smoke", family="dense", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    inputs_embeds=True, tie_embeddings=False,
+)

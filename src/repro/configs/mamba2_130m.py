@@ -1,0 +1,12 @@
+"""mamba2-130m — pure SSM (SSD), attention-free.  [arXiv:2405.21060]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm", num_layers=24, d_model=768,
+    vocab_size=50_280, ssm_state=128, ssm_headdim=64, ssm_expand=2,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-130m-smoke", family="ssm", num_layers=2, d_model=64,
+    vocab_size=256, ssm_state=16, ssm_headdim=16, ssm_expand=2,
+)

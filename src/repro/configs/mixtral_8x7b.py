@@ -1,0 +1,16 @@
+"""mixtral-8x7b — MoE 8 experts top-2 + sliding-window attn.  [arXiv:2401.04088]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe", num_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14_336, vocab_size=32_000,
+    n_experts=8, top_k=2, sliding_window=4096, rope_theta=1_000_000.0,
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="mixtral-8x7b-smoke", family="moe", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    n_experts=4, top_k=2, sliding_window=32, moe_group_size=64,
+    tie_embeddings=False,
+)

@@ -1,0 +1,15 @@
+"""musicgen-large — decoder-only over EnCodec tokens; the EnCodec frontend is
+a STUB: input_specs() feeds precomputed frame embeddings.  [arXiv:2306.05284]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="dense", num_layers=48, d_model=2048,
+    n_heads=32, n_kv_heads=32, head_dim=64, d_ff=8192, vocab_size=2048,
+    inputs_embeds=True, tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-large-smoke", family="dense", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=64,
+    inputs_embeds=True, tie_embeddings=False,
+)

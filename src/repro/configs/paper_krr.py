@@ -1,0 +1,27 @@
+"""The paper's own experiment configs (KRR side of the framework)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KRRConfig:
+    name: str
+    n: int
+    d: int
+    kernel: str = "matern"      # matern | gaussian
+    nu: float = 1.5
+    lengthscale: float = 1.0
+    lambda_scale: float = 0.075  # lambda = scale * n^{-2a/(2a+d)}
+    distribution: str = "bimodal"
+    gamma: float = 0.4
+    noise_sigma: float = 0.5
+
+
+FIG1 = KRRConfig(name="fig1_bimodal3d", n=500_000, d=3, nu=1.5)
+FIG2 = KRRConfig(name="fig2_1d", n=10_000, d=1, nu=1.5,
+                 lambda_scale=0.45, distribution="bimodal1d")
+TABLE1_RQC = KRRConfig(name="table1_rqc", n=10_000, d=3, nu=0.5,
+                       lambda_scale=0.15, distribution="uci_like")
+TABLE1_HTRU2 = KRRConfig(name="table1_htru2", n=17_898, d=8, nu=0.5,
+                         lambda_scale=0.15, distribution="uci_like")
+TABLE1_CCPP = KRRConfig(name="table1_ccpp", n=9_568, d=5, nu=0.5,
+                        lambda_scale=0.15, distribution="uci_like")

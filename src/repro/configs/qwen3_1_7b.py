@@ -1,0 +1,14 @@
+"""qwen3-1.7b — dense GQA with qk_norm.  [hf:Qwen/Qwen3-1.7B family]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b", family="dense", num_layers=28, d_model=2048,
+    n_heads=16, n_kv_heads=8, head_dim=128, d_ff=6144, vocab_size=151_936,
+    qk_norm=True, rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-1.7b-smoke", family="dense", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    qk_norm=True,
+)

@@ -1,0 +1,14 @@
+"""stablelm-12b — dense GQA.  [hf:stabilityai/stablelm-2-12b]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b", family="dense", num_layers=40, d_model=5120,
+    n_heads=32, n_kv_heads=8, head_dim=160, d_ff=13_824, vocab_size=100_352,
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-12b-smoke", family="dense", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    tie_embeddings=False,
+)

@@ -1,0 +1,15 @@
+"""zamba2-7b — Mamba2 backbone + one globally shared attention block applied
+every 6th layer (81 layers: 13 shared-attn sites + 68 mamba).  [arXiv:2411.15242]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid", num_layers=81, d_model=3584,
+    n_heads=32, n_kv_heads=32, head_dim=112, d_ff=14_336, vocab_size=32_000,
+    ssm_state=64, ssm_headdim=64, ssm_expand=2, attn_every=6,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-7b-smoke", family="hybrid", num_layers=7, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+    ssm_state=16, ssm_headdim=16, ssm_expand=2, attn_every=3,
+)

@@ -1,0 +1,25 @@
+"""Core library: the paper's SA leverage-score estimator and the KRR stack.
+
+Public API:
+  kernels    — stationary kernels + spectral densities (Matern, Gaussian)
+  krr        — exact KRR / exact leverage (the O(n^3) oracle)
+  leverage   — SA approximation (Eq. 6): closed forms, quadrature, grid path
+  kde        — density estimation substrates (binned-FFT linear time, direct)
+  nystrom    — Nystrom KRR with importance-sampled landmarks
+  rls        — algebraic baselines (uniform / Recursive-RLS / BLESS)
+  quadrature — vectorized radial quadrature for Eq. (6)
+  polylog    — -Li_s(-x) for the Gaussian closed form
+  sampling   — with-replacement / Gumbel top-k landmark sampling
+"""
+
+from repro.core import (  # noqa: F401
+    kde,
+    kernels,
+    krr,
+    leverage,
+    nystrom,
+    polylog,
+    quadrature,
+    rls,
+    sampling,
+)

@@ -1,0 +1,165 @@
+"""Stationary kernels and their spectral densities.
+
+The paper's method (Eq. 6) needs, for a stationary PSD kernel K(x, y) = K(x - y):
+
+  * the kernel function itself (to build empirical kernel matrices), and
+  * its spectral density m(s), defined through the ordinary-frequency Fourier
+    convention used throughout the paper:
+
+        K(u) = \\int_{R^d} m(s) exp(2 pi i <u, s>) ds.
+
+Bochner's theorem guarantees m >= 0.  All kernels here are isotropic, so both
+K and m depend only on the Euclidean norm of their argument; we expose
+``spectral_density(s_norm, d)`` in terms of the radial frequency ||s||.
+
+Conventions (verified by tests/test_kernels_core.py against 1-D quadrature):
+
+  Matern(nu, ell):   K(r) = 2^{1-nu}/Gamma(nu) (a r)^nu B_nu(a r),  a = sqrt(2 nu)/ell
+                     m(s) = C_{d,nu} (a^2 + 4 pi^2 ||s||^2)^{-(nu + d/2)}
+                     C_{d,nu} = 2^d pi^{d/2} Gamma(nu + d/2) a^{2 nu} / Gamma(nu)
+  Gaussian(sigma):   K(r) = exp(-r^2 / (2 sigma^2))
+                     m(s) = (2 pi sigma^2)^{d/2} exp(-2 pi^2 sigma^2 ||s||^2)
+
+The Matern smoothness alias alpha = nu + d/2 (the Sobolev order of the RKHS)
+is what the paper's closed-form leverage approximation uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _sq_dists(x: Array, y: Array) -> Array:
+    """Pairwise squared Euclidean distances, (n, d) x (m, d) -> (n, m).
+
+    Uses the MXU-friendly expansion ||x - y||^2 = ||x||^2 + ||y||^2 - 2 x.y^T
+    with a clamp at zero to absorb rounding.  This is the pure-jnp oracle; the
+    Pallas `pairwise` kernel computes the same quantity in tiles.
+    """
+    x2 = jnp.sum(x * x, axis=-1)[:, None]
+    y2 = jnp.sum(y * y, axis=-1)[None, :]
+    xy = x @ y.T
+    return jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Matern:
+    """Matern kernel with half-integer smoothness nu in {0.5, 1.5, 2.5}."""
+
+    nu: float = 1.5
+    lengthscale: float = 1.0
+
+    @property
+    def a(self) -> float:
+        """Inverse-scale parameter a = sqrt(2 nu) / lengthscale."""
+        return math.sqrt(2.0 * self.nu) / self.lengthscale
+
+    def alpha(self, d: int) -> float:
+        """Sobolev order of the associated RKHS (paper's alpha = nu + d/2)."""
+        return self.nu + 0.5 * d
+
+    # -- kernel values -------------------------------------------------------
+    def from_distance(self, r: Array) -> Array:
+        ar = self.a * r
+        if self.nu == 0.5:
+            return jnp.exp(-ar)
+        if self.nu == 1.5:
+            return (1.0 + ar) * jnp.exp(-ar)
+        if self.nu == 2.5:
+            return (1.0 + ar + ar * ar / 3.0) * jnp.exp(-ar)
+        raise ValueError(f"unsupported Matern nu={self.nu}; use 0.5 / 1.5 / 2.5")
+
+    def __call__(self, x: Array, y: Array) -> Array:
+        return self.from_distance(jnp.sqrt(_sq_dists(x, y)))
+
+    # -- spectral density ----------------------------------------------------
+    def spectral_constant(self, d: int) -> float:
+        nu, a = self.nu, self.a
+        return (
+            (2.0 ** d)
+            * math.pi ** (d / 2.0)
+            * math.gamma(nu + d / 2.0)
+            * a ** (2.0 * nu)
+            / math.gamma(nu)
+        )
+
+    def spectral_density(self, s_norm: Array, d: int) -> Array:
+        """m(s) as a function of the radial ordinary frequency ||s||."""
+        alpha = self.alpha(d)
+        c = self.spectral_constant(d)
+        return c * (self.a ** 2 + 4.0 * math.pi ** 2 * s_norm ** 2) ** (-alpha)
+
+    def inverse_spectral_density(self, s_norm: Array, d: int) -> Array:
+        """1 / m(s), kept separate to avoid overflow at large ||s||."""
+        alpha = self.alpha(d)
+        c = self.spectral_constant(d)
+        return (self.a ** 2 + 4.0 * math.pi ** 2 * s_norm ** 2) ** alpha / c
+
+
+@dataclasses.dataclass(frozen=True)
+class Gaussian:
+    """Gaussian (RBF) kernel exp(-r^2 / (2 sigma^2))."""
+
+    sigma: float = 1.0
+
+    def alpha(self, d: int) -> float:  # effective smoothness is infinite
+        return math.inf
+
+    def from_distance(self, r: Array) -> Array:
+        return jnp.exp(-(r * r) / (2.0 * self.sigma ** 2))
+
+    def from_sq_distance(self, r2: Array) -> Array:
+        return jnp.exp(-r2 / (2.0 * self.sigma ** 2))
+
+    def __call__(self, x: Array, y: Array) -> Array:
+        return self.from_sq_distance(_sq_dists(x, y))
+
+    def spectral_density(self, s_norm: Array, d: int) -> Array:
+        c = (2.0 * math.pi * self.sigma ** 2) ** (d / 2.0)
+        return c * jnp.exp(-2.0 * math.pi ** 2 * self.sigma ** 2 * s_norm ** 2)
+
+    def inverse_spectral_density(self, s_norm: Array, d: int) -> Array:
+        c = (2.0 * math.pi * self.sigma ** 2) ** (d / 2.0)
+        return jnp.exp(2.0 * math.pi ** 2 * self.sigma ** 2 * s_norm ** 2) / c
+
+
+def Laplacian(lengthscale: float = 1.0) -> Matern:
+    """Laplacian kernel exp(-r / ell) == Matern nu = 1/2 with a = 1/ell."""
+    # Matern(0.5, ell') has a = sqrt(1)/ell' = 1/ell', so ell' = ell works.
+    return Matern(nu=0.5, lengthscale=lengthscale)
+
+
+Kernel = Union[Matern, Gaussian]
+
+
+def kernel_matrix(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
+    """Empirical kernel matrix K(x_i, y_j); the O(n m d) hotspot.
+
+    Pure-jnp path (used on CPU and as the Pallas oracle).  On TPU, call
+    ``repro.kernels.pairwise.ops.kernel_matrix`` instead, which tiles the same
+    computation through VMEM with fp32 accumulation on the MXU.
+    """
+    symmetric = y is None
+    if symmetric:
+        y = x
+    sq = _sq_dists(x, y)
+    if symmetric:
+        # The expansion leaves O(eps * ||x||^2) noise on the self-distances;
+        # pin the diagonal to exactly zero so K_ii = K(0).
+        n = x.shape[0]
+        sq = sq * (1.0 - jnp.eye(n, dtype=sq.dtype))
+    if isinstance(kernel, Gaussian):
+        return kernel.from_sq_distance(sq)
+    return kernel.from_distance(jnp.sqrt(sq))
+
+
+def gram_diagonal(kernel: Kernel, n: int, dtype=jnp.float32) -> Array:
+    """K(x_i, x_i) for stationary kernels is K(0) = 1 for all kernels here."""
+    return jnp.ones((n,), dtype=dtype)

@@ -1,0 +1,80 @@
+"""Nystrom-approximated KRR (paper §2.3).
+
+With landmark columns S, the Nystrom approximation L = K S (S^T K S)^+ S^T K
+substituted into the KRR solution gives (Woodbury; derivation in DESIGN
+history) the subset-of-regressors form
+
+    f_L(x) = K(x, X_S) beta,
+    beta   = (K_nm^T K_nm + n lam K_mm)^{-1} K_nm^T y,
+
+which needs O(n m) kernel evaluations and an O(m^3) solve — the  O(n d_stat^2)
+downstream cost that leverage estimation must not exceed.  L is invariant to
+positive rescaling of S's columns, so with-replacement sampling needs no
+1/sqrt(m q_i) reweighting here (duplicates are absorbed by the jitter).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import Kernel, kernel_matrix
+from repro.core.sampling import sample_with_replacement
+
+Array = jax.Array
+
+
+class NystromFit(NamedTuple):
+    beta: Array          # (m,)
+    landmarks: Array     # (m, d) landmark inputs
+    landmark_idx: Array  # (m,) indices into the training set
+    lam: float
+
+
+def fit_from_landmarks(
+    kernel: Kernel,
+    x: Array,
+    y: Array,
+    lam: float,
+    landmark_idx: Array,
+    jitter: float = 1e-6,
+) -> NystromFit:
+    n = x.shape[0]
+    xm = x[landmark_idx]
+    k_nm = kernel_matrix(kernel, x, xm)                   # (n, m)
+    k_mm = kernel_matrix(kernel, xm)                      # (m, m)
+    m = xm.shape[0]
+    lhs = k_nm.T @ k_nm + n * lam * k_mm
+    # Relative jitter: with-replacement sampling duplicates landmark columns,
+    # which makes lhs exactly singular — regularize at the matrix's own scale
+    # so it also survives fp32.
+    scale = jnp.trace(lhs) / m
+    lhs = lhs + (jitter * scale) * jnp.eye(m, dtype=k_nm.dtype)
+    beta = jnp.linalg.solve(lhs, k_nm.T @ y)
+    return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx, lam=lam)
+
+
+def fit(
+    key: jax.Array,
+    kernel: Kernel,
+    x: Array,
+    y: Array,
+    lam: float,
+    num_landmarks: int,
+    probs: Array,
+    jitter: float = 1e-6,
+) -> NystromFit:
+    """Sample landmarks ~ probs (with replacement, paper Thm 2) and solve."""
+    idx = sample_with_replacement(key, probs, num_landmarks)
+    return fit_from_landmarks(kernel, x, y, lam, idx, jitter=jitter)
+
+
+def predict(kernel: Kernel, fit_: NystromFit, x_new: Array) -> Array:
+    return kernel_matrix(kernel, x_new, fit_.landmarks) @ fit_.beta
+
+
+def fitted(kernel: Kernel, fit_: NystromFit, x_train: Array) -> Array:
+    """In-sample predictions f_L(x_i) (for the paper's R_n risk metric)."""
+    return predict(kernel, fit_, x_train)

@@ -1,0 +1,116 @@
+"""Vectorized numerical quadrature for the paper's Eq. (6) radial integral.
+
+The d-dimensional integral
+
+    I(p) = \\int_{R^d} ds / (p + lambda / m(s))
+
+reduces, for isotropic m, to the 1-D radial integral (paper App. D.1)
+
+    I(p) = Vol(S^{d-1}) \\int_0^inf r^{d-1} / (p + lambda / m(r)) dr,
+    Vol(S^{d-1}) = 2 pi^{d/2} / Gamma(d/2).
+
+TPU adaptation (DESIGN.md §3): the paper uses adaptive QUADPACK per point.  We
+instead use a *fixed-order* Gauss-Legendre rule after a scale-aware rational
+substitution, which vectorizes over all n query points with one fused einsum —
+adaptive subdivision has no efficient TPU mapping, fixed-order batched
+quadrature does.
+
+The substitution r = r_scale * t / (1 - t), t in [0, 1) maps the half-line to
+the unit interval.  For a Matern kernel the integrand decays like
+r^{d-1-2*alpha}; the transformed integrand behaves like (1-t)^{2*nu-1} near
+t = 1, which is bounded for nu >= 1/2, so Gauss-Legendre converges fast.  The
+scale r_scale is chosen per-point at the knee of the integrand,
+(p C / lambda)^{1/(2 alpha)} / (2 pi), so one rule order works across the whole
+density range.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kernels as K
+
+Array = jax.Array
+
+
+@functools.lru_cache(maxsize=None)
+def gauss_legendre(order: int, a: float = 0.0, b: float = 1.0):
+    """Cached Gauss-Legendre nodes/weights on [a, b] (host numpy, fp64)."""
+    x, w = np.polynomial.legendre.leggauss(order)
+    x = 0.5 * (b - a) * (x + 1.0) + a
+    w = 0.5 * (b - a) * w
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+def sphere_surface(d: int) -> float:
+    """Surface area of the unit (d-1)-sphere embedded in R^d."""
+    return 2.0 * math.pi ** (d / 2.0) / math.gamma(d / 2.0)
+
+
+def radial_integral_matern(
+    p: Array,
+    lam: float,
+    kernel: K.Matern,
+    d: int,
+    order: int = 256,
+) -> Array:
+    """Eq. (6) for a Matern kernel, exact integrand, vectorized over p.
+
+    Returns I(p_i) = Vol(S^{d-1}) * int_0^inf r^{d-1} / (p_i + lam/m(r)) dr for
+    every entry of ``p``.  This is the *faithful* numerical path; the closed
+    form in ``leverage.matern_closed_form`` drops the +a^2 term (paper App.
+    D.2) and is validated against this.
+    """
+    alpha = kernel.alpha(d)
+    c_spec = kernel.spectral_constant(d)
+    t, w = gauss_legendre(order)
+    p = jnp.asarray(p)
+    # Knee of the integrand: where p ~ lam/m(r)  =>  (4 pi^2) r^2 ~ (pC/lam)^(1/alpha)
+    r_scale = jnp.maximum((p * c_spec / lam) ** (1.0 / (2.0 * alpha)), kernel.a) / (
+        2.0 * math.pi
+    )
+    r = r_scale[..., None] * t / (1.0 - t)  # (..., order)
+    dr = r_scale[..., None] * (1.0 / (1.0 - t) ** 2)
+    inv_m = (kernel.a ** 2 + 4.0 * math.pi ** 2 * r ** 2) ** alpha / c_spec
+    integrand = r ** (d - 1) / (p[..., None] + lam * inv_m)
+    return sphere_surface(d) * jnp.sum(integrand * dr * w, axis=-1)
+
+
+def radial_integral_gaussian(
+    p: Array,
+    lam: float,
+    kernel: K.Gaussian,
+    d: int,
+    order: int = 256,
+) -> Array:
+    """Eq. (6) for a Gaussian kernel via direct radial quadrature.
+
+    The integrand r^{d-1} / (p + lam' e^{c r^2}) lives on r in
+    [0, ~sqrt(log((1+p/lam')/eps)/c)]; we substitute r = r_max * t and use a
+    fixed GL rule.  Cross-validated against the polylog closed form
+    (leverage.gaussian_closed_form) in tests.
+    """
+    sigma = kernel.sigma
+    lam_p = lam * (2.0 * math.pi * sigma ** 2) ** (-d / 2.0)
+    c = 2.0 * math.pi ** 2 * sigma ** 2
+    p = jnp.asarray(p)
+    t, w = gauss_legendre(order)
+    # Beyond r_max the integrand is < e^-40 of its plateau value.
+    r_max = jnp.sqrt((jnp.log1p(p / lam_p) + 40.0) / c)
+    r = r_max[..., None] * t
+    integrand = r ** (d - 1) / (p[..., None] + lam_p * jnp.exp(c * r * r))
+    return sphere_surface(d) * r_max * jnp.sum(integrand * w, axis=-1)
+
+
+def radial_integral(p, lam, kernel, d, order: int = 256):
+    """Dispatch Eq. (6) on the kernel family."""
+    if isinstance(kernel, K.Matern):
+        return radial_integral_matern(p, lam, kernel, d, order)
+    if isinstance(kernel, K.Gaussian):
+        return radial_integral_gaussian(p, lam, kernel, d, order)
+    raise TypeError(f"no radial integral for {type(kernel)}")

@@ -1,0 +1,163 @@
+"""Algebraic leverage-score baselines the paper compares against (§4.1).
+
+  * ``uniform``        — "Vanilla": q_i = 1/n (no leverage information).
+  * ``recursive_rls``  — Musco & Musco (2017) Recursive-RLS: recursively halve
+    the data, estimate ridge leverage on the half, Bernoulli-sample a sketch,
+    refine.  O(n d_stat^2) kernel evaluations.
+  * ``bless``          — Rudi et al. (2018) bottom-up path following: start at
+    a huge ridge (where uniform sampling is provably fine) and geometrically
+    anneal it down to n*lam, resampling a sketch at every step.
+
+All share the weighted projection estimator of the ridge leverage scores:
+with sketch S (indices), importance weights w (expected inverse inclusion),
+absolute ridge mu = n * lam,
+
+    l_hat_i = (1/mu) * ( K_ii - k_iS W^{1/2} (W^{1/2} K_SS W^{1/2} + mu I)^{-1}
+                                 W^{1/2} k_Si )
+
+which is exact when S = [n], w = 1 (then l_hat = diag(K (K + mu)^{-1})).
+These are *host-recursive* drivers (dynamic sketch sizes) around jit-able
+dense linear algebra — on TPU the inner K_{:,S} blocks route through the
+Pallas `pairwise` kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels import Kernel, kernel_matrix
+
+Array = jax.Array
+
+
+class RLSResult(NamedTuple):
+    leverage: Array   # (n,) approximate statistical leverage scores
+    probs: Array      # (n,) normalized sampling distribution
+    sketch_size: int  # size of the final sketch used
+
+
+def uniform(n: int) -> RLSResult:
+    p = jnp.full((n,), 1.0 / n)
+    return RLSResult(leverage=p * n, probs=p, sketch_size=0)
+
+
+def _projection_leverage(
+    kernel: Kernel,
+    x: Array,
+    sketch_x: Array,
+    weights: Array,
+    mu: float,
+    jitter: float = 1e-6,
+) -> Array:
+    """Weighted projection estimate of ridge leverage for all n points."""
+    k_ns = kernel_matrix(kernel, x, sketch_x)            # (n, m)
+    k_ss = kernel_matrix(kernel, sketch_x)               # (m, m)
+    w_half = jnp.sqrt(weights)
+    mat = w_half[:, None] * k_ss * w_half[None, :]
+    m = sketch_x.shape[0]
+    chol = jnp.linalg.cholesky(mat + (mu + jitter) * jnp.eye(m, dtype=mat.dtype))
+    rhs = (k_ns * w_half[None, :]).T                     # (m, n)
+    solved = jax.scipy.linalg.cho_solve((chol, True), rhs)
+    quad = jnp.sum(rhs * solved, axis=0)                 # k_iS W^.5 (..)^-1 W^.5 k_Si
+    k_diag = jnp.ones(x.shape[0], dtype=k_ns.dtype)      # stationary: K_ii = K(0) = 1
+    lev = (k_diag - quad) / mu
+    return jnp.clip(lev, 1e-12, 1.0)
+
+
+def _bernoulli_sketch(rng: np.random.Generator, inclusion: np.ndarray):
+    mask = rng.random(inclusion.shape[0]) < inclusion
+    idx = np.nonzero(mask)[0]
+    weights = 1.0 / np.maximum(inclusion[idx], 1e-12)
+    return idx, weights
+
+
+def recursive_rls(
+    kernel: Kernel,
+    x: Array,
+    lam: float,
+    seed: int = 0,
+    base_size: int = 256,
+    oversample: float = 8.0,
+) -> RLSResult:
+    """Musco & Musco (2017) Recursive-RLS (host-driven recursion)."""
+    n = x.shape[0]
+    mu = n * lam
+    rng = np.random.default_rng(seed)
+    x_np = np.asarray(x)
+
+    def recurse(indices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (sketch_indices_global, sketch_weights) for this subset."""
+        m = indices.shape[0]
+        if m <= base_size:
+            return indices, np.ones(m)
+        half = rng.permutation(indices)[: m // 2]
+        sketch_idx, sketch_w = recurse(half)
+        lev = np.asarray(
+            _projection_leverage(
+                kernel, jnp.asarray(x_np[half]), jnp.asarray(x_np[sketch_idx]),
+                jnp.asarray(sketch_w), mu,
+            )
+        )
+        inclusion = np.minimum(1.0, oversample * lev * math.log(max(m, 2)))
+        pick, w = _bernoulli_sketch(rng, inclusion)
+        if pick.shape[0] == 0:  # degenerate: keep a couple of points
+            pick, w = np.arange(min(2, half.shape[0])), np.ones(min(2, half.shape[0]))
+        return half[pick], w
+
+    sketch_idx, sketch_w = recurse(np.arange(n))
+    lev = _projection_leverage(
+        kernel, x, jnp.asarray(x_np[sketch_idx]), jnp.asarray(sketch_w), mu
+    )
+    return RLSResult(
+        leverage=lev, probs=lev / jnp.sum(lev), sketch_size=int(sketch_idx.shape[0])
+    )
+
+
+def bless(
+    kernel: Kernel,
+    x: Array,
+    lam: float,
+    seed: int = 0,
+    anneal: float = 2.0,
+    oversample: float = 8.0,
+    init_size: int = 64,
+) -> RLSResult:
+    """BLESS (Rudi et al. 2018), bottom-up ridge annealing (host-driven).
+
+    Ridge path mu_t = n / anneal^t down to n*lam; at each step the sketch is
+    Bernoulli-resampled from leverage estimates at the *current* ridge, for
+    which the previous (coarser) sketch is already accurate.
+    """
+    n = x.shape[0]
+    mu_final = n * lam
+    rng = np.random.default_rng(seed)
+    x_np = np.asarray(x)
+
+    sketch_idx = rng.permutation(n)[:init_size]
+    sketch_w = np.ones(init_size)
+    mu = float(n)
+    steps = max(1, int(math.ceil(math.log(mu / mu_final, anneal))))
+    for _ in range(steps):
+        mu = max(mu / anneal, mu_final)
+        lev = np.asarray(
+            _projection_leverage(
+                kernel, x, jnp.asarray(x_np[sketch_idx]), jnp.asarray(sketch_w), mu
+            )
+        )
+        inclusion = np.minimum(1.0, oversample * lev * math.log(n))
+        pick, w = _bernoulli_sketch(rng, inclusion)
+        if pick.shape[0] == 0:
+            pick, w = sketch_idx, sketch_w
+            continue
+        sketch_idx, sketch_w = pick, w
+    lev = _projection_leverage(
+        kernel, x, jnp.asarray(x_np[sketch_idx]), jnp.asarray(sketch_w), mu_final
+    )
+    return RLSResult(
+        leverage=lev, probs=lev / jnp.sum(lev), sketch_size=int(sketch_idx.shape[0])
+    )

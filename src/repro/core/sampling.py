@@ -1,0 +1,35 @@
+"""Importance-sampling utilities for landmark selection (paper Thm 2 setting)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sample_with_replacement(key: jax.Array, probs: Array, m: int) -> Array:
+    """Draw m landmark indices iid from the categorical distribution probs.
+
+    This is the sampling model of paper Theorem 2 (columns chosen with
+    replacement).  Implemented with jax.random.categorical over log-probs so
+    it is vectorized and reproducible on accelerator.
+    """
+    logits = jnp.log(jnp.maximum(probs, 1e-38))
+    return jax.random.categorical(key, logits, shape=(m,))
+
+
+def sample_without_replacement(key: jax.Array, probs: Array, m: int) -> Array:
+    """Gumbel top-k sampling of m distinct indices proportional to probs."""
+    logits = jnp.log(jnp.maximum(probs, 1e-38))
+    gumbel = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
+    return jax.lax.top_k(logits + gumbel, m)[1]
+
+
+def bernoulli_subset(key: jax.Array, inclusion: Array):
+    """Independent Bernoulli inclusion (used by Recursive-RLS / BLESS).
+
+    Returns a boolean mask; callers compact it host-side (the recursive
+    baselines are host-driven, so dynamic sizes are fine there).
+    """
+    return jax.random.uniform(key, inclusion.shape) < inclusion

@@ -1,0 +1,43 @@
+"""Leverage-score data selection — the paper's technique applied to the LM
+data pipeline (beyond-paper bridge, OFF by default; see DESIGN.md §4).
+
+The paper's insight: statistical leverage (how much a point matters to a
+kernel regressor) is an analytic function of the *local input density*:
+l(x) ∝ min{1, (λ/p(x))^{1-d/(2α)}} — rare points matter more.  Applied to
+LM training: embed each candidate sequence, estimate p̂ at the embeddings
+(KDE, O(n) binned or tiled-direct), convert to SA sampling weights, and
+importance-sample the batch.  Up-weights rare/unique data, exactly the
+"sample where density is low" behaviour the paper proves optimal for KRR.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kde as core_kde
+from repro.core import kernels as K
+from repro.core import leverage, sampling
+
+Array = jax.Array
+
+
+def sa_weights(embeddings: Array, lam: float, *, nu: float = 1.5,
+               kde_bandwidth: float | None = None,
+               density_floor: float = 1e-6) -> Array:
+    """Normalised SA sampling weights for a set of example embeddings."""
+    n, d = embeddings.shape
+    h = (kde_bandwidth if kde_bandwidth is not None
+         else float(core_kde.scott_bandwidth(embeddings)))
+    p = core_kde.kde_direct(embeddings, embeddings, h)
+    p = jnp.maximum(p, density_floor)
+    kern = K.Matern(nu=nu)
+    lev = leverage.matern_closed_form(p, lam, kern, d)
+    return lev / jnp.sum(lev)
+
+
+def select(key: Array, embeddings: Array, k: int, lam: float = 1e-3,
+           **kw) -> Array:
+    """Pick k example indices by SA leverage importance sampling."""
+    q = sa_weights(embeddings, lam, **kw)
+    return sampling.sample_without_replacement(key, q, k)

@@ -1,0 +1,70 @@
+"""Deterministic, stateless synthetic token pipeline.
+
+``batch_at(step)`` is a pure function of (seed, step), which gives exact
+checkpoint/restart data resume for free: a restarted trainer replays the
+stream from its restored step with no iterator state to persist.  Batches
+are placed with the active mesh's batch sharding when one is installed.
+
+The generator is a Zipf-ish unigram stream with a short induced n-gram
+structure (next token depends on the previous one through a permuted
+offset), so a real model trains to a visibly decreasing loss — enough signal
+for the ~100M-param example run without external data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    inputs_embeds_dim: int = 0   # >0: emit embeddings (audio/vlm stubs)
+
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s, v = self.batch, self.seq_len, self.vocab_size
+        # low-entropy first-order structure: 80% repeat the previous token,
+        # else jump by a small zipf-ish offset -> x_{t+1} = (x_t + base) % v
+        u = jax.random.uniform(k1, (b, s + 1))
+        jump = jax.random.uniform(k3, (b, s + 1))
+        base = jnp.where(u < 0.8, 0,
+                         1 + (jump * jump * 30).astype(jnp.int32))
+        toks = jnp.cumsum(base, axis=1) % v
+        inputs, labels = toks[:, :-1], toks[:, 1:]
+        out = {"labels": labels}
+        if self.inputs_embeds_dim:
+            emb = jax.random.normal(
+                k2, (b, s, self.inputs_embeds_dim), dtype=jnp.float32)
+            out["inputs"] = emb
+        else:
+            out["inputs"] = inputs
+        act = shd.active()
+        if act is not None:
+            out = {
+                "inputs": jax.device_put(
+                    out["inputs"],
+                    act.sharding(("batch", "seq", None)
+                                 if self.inputs_embeds_dim
+                                 else ("batch", "seq"))),
+                "labels": jax.device_put(out["labels"],
+                                         act.sharding(("batch", "seq"))),
+            }
+        return out
+
+
+def for_config(cfg: ModelConfig, batch: int, seq_len: int,
+               seed: int = 0) -> TokenStream:
+    return TokenStream(
+        vocab_size=cfg.vocab_size, batch=batch, seq_len=seq_len, seed=seed,
+        inputs_embeds_dim=cfg.d_model if cfg.inputs_embeds else 0)

@@ -1,0 +1,53 @@
+"""Error-feedback gradient compression for the cross-pod data-parallel
+all-reduce (1-bit sign + per-tensor L1 scale, à la EF-SGD / 1-bit Adam).
+
+At 2+ pods the inter-pod links are the scarcest bandwidth (ICI within a pod,
+DCN between pods).  Compressing the pod-synchronised gradient to sign+scale
+cuts cross-pod bytes 16x (bf16) while the residual buffer keeps the update
+unbiased-in-the-limit.  Exposed as a ``compress_fn`` for make_train_step;
+the all-reduce itself stays inside the jit (GSPMD partitions it), so the
+compression simply changes WHAT is reduced.
+
+Also provides fp32->bf16 "light" compression (2x) as a low-risk default.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict  # fp32, same tree as grads
+
+
+def ef_init(params) -> EFState:
+    return EFState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def sign_compress(grads, state: EFState):
+    """Returns (decompressed grads as seen post-allreduce, new state).
+
+    c = sign(g + r) * mean|g + r|;  r' = (g + r) - c
+    """
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        scale = jnp.mean(jnp.abs(acc))
+        c = jnp.sign(acc) * scale
+        return c, acc - c
+
+    out = jax.tree.map(one, grads, state.residual)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return comp, EFState(resid)
+
+
+def bf16_compress(grads):
+    """Cheap 2x: round-trip the DP all-reduce payload through bf16."""
+    return jax.tree.map(
+        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each subpackage follows the kernel.py (pl.pallas_call + BlockSpec) /
+ops.py (jit'd public wrapper) / ref.py (pure-jnp oracle) structure and is
+validated in interpret mode on CPU (tests/test_pallas_*.py).
+
+  pairwise        — tiled stationary-kernel (Gram) matrix      [paper hot spot]
+  kde             — tiled direct Gaussian KDE                  [paper hot spot]
+  flash_attention — causal GQA flash attention (+ SWA)         [LM prefill]
+  ssd             — Mamba2 SSD chunked scan                    [SSM mixing]
+"""

@@ -1,0 +1,1 @@
+"""flash_attention Pallas kernel package (kernel.py + ops.py + ref.py)."""

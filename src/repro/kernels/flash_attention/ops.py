@@ -1,0 +1,68 @@
+"""jit'd public wrapper for flash attention (padding + backend dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as fk
+from repro.kernels.flash_attention import ref
+
+Array = jax.Array
+
+
+def _round_up(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret", "use_pallas"),
+)
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = -1,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> Array:
+    """Causal GQA (flash) attention; (b, hq, s, dh) -> (b, hq, s, dh).
+
+    Sequence is zero-padded to tile multiples; padded q rows attend causally to
+    real keys and are sliced off, and padded k rows are after every real q row
+    so the causal mask removes them (for the non-causal path we clamp to the
+    reference instead).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if not use_pallas or not causal:
+        # non-causal padding would need explicit length masking; XLA path is
+        # used for the (rare) bidirectional case.
+        return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, s, dh = q.shape
+    bq = min(block_q, _round_up(s, 128 if not interpret else 8))
+    bk = min(block_k, _round_up(s, 128 if not interpret else 8))
+    sp = _round_up(s, max(bq, bk))
+    bq = min(bq, sp)
+    bk = min(bk, sp)
+    if sp != s:
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    out = fk.flash_attention_padded(
+        q, k, v, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :, :s, :]

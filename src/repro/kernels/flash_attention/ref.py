@@ -1,0 +1,49 @@
+"""Pure-jnp oracle: causal GQA attention with optional sliding window.
+
+Shapes follow the LM stack convention:
+  q: (batch, n_q_heads, seq, head_dim)
+  k, v: (batch, n_kv_heads, seq, head_dim)       n_q_heads % n_kv_heads == 0
+Returns (batch, n_q_heads, seq, head_dim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = -1,
+    scale: float | None = None,
+) -> Array:
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) * scale
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)  # align ends (self-attn: offset 0)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

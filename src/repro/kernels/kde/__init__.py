@@ -1,0 +1,1 @@
+"""kde Pallas kernel package (kernel.py + ops.py + ref.py)."""

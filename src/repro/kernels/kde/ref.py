@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the tiled Gaussian-KDE Pallas kernel.
+
+p_hat(q_i) = (1 / (n (2 pi h^2)^{d/2})) * sum_j exp(-||q_i - x_j||^2 / (2 h^2))
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def kde(query: Array, data: Array, h: float) -> Array:
+    q = query.astype(jnp.float32)
+    x = data.astype(jnp.float32)
+    q2 = jnp.sum(q * q, axis=-1)[:, None]
+    x2 = jnp.sum(x * x, axis=-1)[None, :]
+    sq = jnp.maximum(q2 + x2 - 2.0 * (q @ x.T), 0.0)
+    n, d = data.shape
+    norm = 1.0 / (n * (2.0 * math.pi * h * h) ** (d / 2.0))
+    return norm * jnp.sum(jnp.exp(-sq / (2.0 * h * h)), axis=1)

@@ -1,0 +1,1 @@
+"""pairwise Pallas kernel package (kernel.py + ops.py + ref.py)."""

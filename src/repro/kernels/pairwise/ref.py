@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the tiled stationary-kernel matrix kernel.
+
+K[i, j] = k(||x_i - y_j||) for an isotropic stationary kernel k, computed with
+the MXU-friendly expansion ||x-y||^2 = ||x||^2 + ||y||^2 - 2 x.y^T.  This is
+the reference the Pallas kernel is validated against (tests/test_pallas_pairwise.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sq_dists(x: Array, y: Array) -> Array:
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1)[:, None]
+    y2 = jnp.sum(y * y, axis=-1)[None, :]
+    return jnp.maximum(x2 + y2 - 2.0 * (x @ y.T), 0.0)
+
+
+def apply_map(sq: Array, *, kind: str, nu: float, a: float, sigma: float) -> Array:
+    """Map squared distances through the stationary kernel profile."""
+    if kind == "gaussian":
+        return jnp.exp(-sq / (2.0 * sigma * sigma))
+    if kind != "matern":
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    ar = a * jnp.sqrt(sq)
+    if nu == 0.5:
+        return jnp.exp(-ar)
+    if nu == 1.5:
+        return (1.0 + ar) * jnp.exp(-ar)
+    if nu == 2.5:
+        return (1.0 + ar + ar * ar / 3.0) * jnp.exp(-ar)
+    raise ValueError(f"unsupported Matern nu={nu}")
+
+
+def pairwise(
+    x: Array,
+    y: Array,
+    *,
+    kind: str = "matern",
+    nu: float = 1.5,
+    a: float = 1.0,
+    sigma: float = 1.0,
+    out_dtype=jnp.float32,
+) -> Array:
+    """(n, d) x (m, d) -> (n, m) kernel matrix, fp32 internally."""
+    return apply_map(sq_dists(x, y), kind=kind, nu=nu, a=a, sigma=sigma).astype(out_dtype)

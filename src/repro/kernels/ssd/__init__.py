@@ -1,0 +1,1 @@
+"""ssd Pallas kernel package (kernel.py + ops.py + ref.py)."""

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+Grid (batch, heads, n_chunks); the LAST axis is the sequential chunk axis, so
+the inter-chunk SSM state (headdim p, dstate s) lives in fp32 VMEM scratch and
+is carried across grid steps (the TPU grid is sequential).  Per chunk:
+
+  intra-chunk   y_ij += (C_i . B_j) * exp(Acum_i - Acum_j) * x_j   (c x c MXU)
+  inter-chunk   y_i  += exp(Acum_i) * C_i . S_prev^T               (c x s MXU)
+  state update  S    <- exp(Acum_last) * S + (decay_out * x)^T B   (p x c MXU)
+
+All decays are exp of non-positive sums => bounded by 1, so fp32 is safe.
+The attention-like (c x c) matrix only ever exists per-tile in VMEM — this is
+the "linear-attention duality" form of the scan, MXU-dominated instead of the
+bandwidth-bound elementwise recurrence.
+
+Layouts: x (b, h, l, p); a_log (b, h, l); B, C (b, l, s) shared across heads
+(ngroups=1, as in Mamba2 / Zamba2 defaults).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_body(x_ref, a_ref, b_ref, c_ref, o_ref, s_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)   # (c, p)
+    a = a_ref[0, 0].astype(jnp.float32)   # (1, c) -- kept 2D for TPU layout
+    Bc = b_ref[0].astype(jnp.float32)     # (c, s)
+    Cc = c_ref[0].astype(jnp.float32)     # (c, s)
+
+    a_cum = jnp.cumsum(a[0])              # (c,) inclusive
+    a_last = a_cum[chunk - 1]
+
+    # intra-chunk: (C B^T  *  exp(segsum)) @ x
+    G = jax.lax.dot_general(
+        Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (c, c)
+    diff = a_cum[:, None] - a_cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+    y = jax.lax.dot_general(
+        G * L, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (c, p)
+
+    # inter-chunk: decay_in * C @ S^T
+    S = s_scr[...]                        # (p, s)
+    y += jnp.exp(a_cum)[:, None] * jax.lax.dot_general(
+        Cc, S, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (c, p)
+
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    # state update for the next chunk
+    decay_out = jnp.exp(a_last - a_cum)   # (c,)
+    s_scr[...] = jnp.exp(a_last) * S + jax.lax.dot_general(
+        decay_out[:, None] * x, Bc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (p, s)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_padded(
+    x: Array,
+    a_log: Array,
+    B: Array,
+    C: Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> Array:
+    """x (b,h,l,p), a_log (b,h,l), B,C (b,l,s); l % chunk == 0."""
+    b, h, l, p = x.shape
+    s = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    grid = (b, h, nc)
+    a3 = a_log.reshape(b, h, nc, chunk)  # blocked as (1,1,1,chunk)
+    body = functools.partial(_ssd_body, chunk=chunk)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, chunk, s), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, s), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, l, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+        interpret=interpret,
+    )(x, a3, B, C)

@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the SSD Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as sk
+from repro.kernels.ssd import ref
+
+Array = jax.Array
+
+
+def _round_up(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_pallas"))
+def ssd(
+    x: Array,
+    a_log: Array,
+    B: Array,
+    C: Array,
+    *,
+    chunk: int = 64,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> Array:
+    """Mamba2 SSD scan.  x (b,l,h,p), a_log (b,l,h), B,C (b,l,s) -> (b,l,h,p).
+
+    Sequence is zero-padded to a chunk multiple; padded steps have a_log = 0
+    (decay 1) and x = 0, so they do not perturb the state, and their outputs
+    are sliced off.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, l, h, p = x.shape
+    chunk = min(chunk, _round_up(l, 8))
+    lp = _round_up(l, chunk)
+    if lp != l:
+        x = jnp.pad(x, ((0, 0), (0, lp - l), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, lp - l), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, lp - l), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, lp - l), (0, 0)))
+    if not use_pallas:
+        return ref.ssd_chunked(x, a_log, B, C, chunk=chunk)[:, :l]
+    xh = jnp.moveaxis(x, 2, 1)        # (b,h,l,p)
+    ah = jnp.moveaxis(a_log, 2, 1)    # (b,h,l)
+    out = sk.ssd_padded(xh, ah, B, C, chunk=chunk, interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)[:, :l]

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) kernel.
+
+Semantics (ngroups = 1, B/C shared across heads):
+
+  state  S_t = a_t * S_{t-1} + x_t (x) B_t      S: (headdim p, dstate s)
+  output y_t = S_t . C_t                        per head
+
+with a_t = exp(a_log_t) in (0, 1] the discretised decay (a_log = Delta*A <= 0).
+
+Two references:
+  * ``ssd_scan``    — the literal recurrence via lax.scan (ground truth);
+  * ``ssd_chunked`` — the chunked/segsum SSD reformulation (Mamba2 paper,
+    Listing 1), which the Pallas kernel mirrors tile-for-tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssd_scan(x: Array, a_log: Array, B: Array, C: Array) -> Array:
+    """x: (b,l,h,p), a_log: (b,l,h), B,C: (b,l,s) -> y: (b,l,h,p)."""
+    b, l, h, p = x.shape
+    s = B.shape[-1]
+
+    def step(S, inp):
+        x_t, a_t, B_t, C_t = inp  # (b,h,p), (b,h), (b,s), (b,s)
+        S = S * jnp.exp(a_t)[..., None, None] + jnp.einsum("bhp,bs->bhps", x_t, B_t)
+        y = jnp.einsum("bhps,bs->bhp", S, C_t)
+        return S, y
+
+    S0 = jnp.zeros((b, h, p, s), dtype=jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(a_log, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(C, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (b,l,h,p)
+
+
+def _segsum(a_cum: Array) -> Array:
+    """L[i, j] = sum_{t=j+1..i} a_log_t for j <= i, -inf above the diagonal."""
+    c = a_cum.shape[-1]
+    diff = a_cum[..., :, None] - a_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), dtype=bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, a_log: Array, B: Array, C: Array, *,
+                chunk: int = 64) -> Array:
+    """Chunked SSD; identical output to ssd_scan (tested)."""
+    b, l, h, p = x.shape
+    s = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xf = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    af = a_log.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bf = B.reshape(b, nc, chunk, s).astype(jnp.float32)
+    Cf = C.reshape(b, nc, chunk, s).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(af, axis=2)  # (b,nc,c,h) inclusive
+    L = jnp.exp(_segsum(jnp.moveaxis(a_cum, 3, 2)))  # (b,nc,h,c,c)
+    G = jnp.einsum("bnis,bnjs->bnij", Cf, Bf)  # (b,nc,c,c)
+    y_intra = jnp.einsum("bnij,bnhij,bnjhp->bnihp", G, L, xf)
+
+    # chunk-end states: S_n = sum_j exp(A_last - A_cum_j) x_j (x) B_j
+    a_last = a_cum[:, :, -1:, :]  # (b,nc,1,h)
+    decay_out = jnp.exp(a_last - a_cum)  # (b,nc,c,h)
+    states = jnp.einsum("bnch,bnchp,bncs->bnhps", decay_out, xf, Bf)
+
+    # inter-chunk recurrence over chunk index: S_prev scan
+    chunk_decay = jnp.exp(a_last[:, :, 0, :])  # (b,nc,h) total decay per chunk
+
+    def step(S, inp):
+        st, dec = inp  # (b,h,p,s), (b,h)
+        S_out = S  # state entering this chunk
+        S = S * dec[..., None, None] + st
+        return S, S_out
+
+    S0 = jnp.zeros((b, h, p, s), dtype=jnp.float32)
+    _, S_in = jax.lax.scan(
+        step, S0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    S_in = jnp.moveaxis(S_in, 0, 1)  # (b,nc,h,p,s) state entering each chunk
+
+    decay_in = jnp.exp(a_cum)  # (b,nc,c,h)
+    y_inter = jnp.einsum("bnch,bncs,bnhps->bnchp", decay_in, Cf, S_in)
+    y = y_intra + y_inter
+    return y.reshape(b, l, h, p).astype(x.dtype)

@@ -1,0 +1,20 @@
+"""Production meshes.  A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state — jax locks the device count on
+first backend init, and only dryrun.py is allowed to force 512 host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axis: str = "data"):
+    """All addressable devices on one axis (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), (axis,))

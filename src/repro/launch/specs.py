@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct stand-ins for every model input of every dry-run cell.
+
+Nothing here allocates device memory: params, optimizer state, batches and
+caches are all abstract (weak-type-correct, shardable).  The same specs feed
+``jax.jit(...).lower(...)`` for the dry-run and the roofline analysis.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.layers import abstract_params
+from repro.optim import adamw
+
+
+def _sds(shape, dtype, axes) -> jax.ShapeDtypeStruct:
+    act = shd.active()
+    if act is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=act.sharding(axes, shape))
+
+
+def params_spec(cfg: ModelConfig):
+    return abstract_params(M.model_specs(cfg), cfg.pdtype)
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.inputs_embeds:
+        inputs = _sds((b, s, cfg.d_model), cfg.cdtype, ("batch", "seq", None))
+    else:
+        inputs = _sds((b, s), jnp.int32, ("batch", "seq"))
+    labels = _sds((b, s), jnp.int32, ("batch", "seq"))
+    return {"inputs": inputs, "labels": labels}
+
+
+def caches_spec(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract mirror of model.init_caches (same shapes/dtypes)."""
+    concrete = jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len))
+
+    def annotate(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        key = names[-1] if names else ""
+        if key in ("k", "v"):
+            axes = ("layers", "batch", "kv_heads", "seq_kv", None)
+        elif key == "ssm":
+            axes = ("layers", "batch", "ssm_heads", None, None)
+        else:  # conv rings
+            axes = ("layers", "batch", None, "mlp" if key == "conv_x" else None)
+        return _sds(leaf.shape, leaf.dtype, axes[:len(leaf.shape)]
+                    if len(axes) >= len(leaf.shape) else
+                    axes + (None,) * (len(leaf.shape) - len(axes)))
+
+    return jax.tree_util.tree_map_with_path(annotate, concrete)
+
+
+def decode_inputs_spec(cfg: ModelConfig, shape: ShapeSpec):
+    b = shape.global_batch
+    if cfg.inputs_embeds:
+        tok = _sds((b, 1, cfg.d_model), cfg.cdtype, ("batch", None, None))
+    else:
+        tok = _sds((b, 1), jnp.int32, ("batch", None))
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return tok, index
+
+
+def prefill_inputs_spec(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.inputs_embeds:
+        return _sds((b, s, cfg.d_model), cfg.cdtype, ("batch", "seq", None))
+    return _sds((b, s), jnp.int32, ("batch", "seq"))
+
+
+def train_state_spec(cfg: ModelConfig, hp=None):
+    p = params_spec(cfg)
+    return p, adamw.abstract_init(p, hp)

@@ -1,0 +1,67 @@
+"""Training launcher.
+
+On real hardware this is the per-host entry point (jax.distributed.initialize
+is called when JAX_COORDINATOR is set, then the production mesh spans all
+pods); on CPU it drives smoke/example-scale runs with the same Trainer,
+checkpointing and data-resume machinery.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 20 --batch 4 --seq 128 --ckpt /tmp/repro_ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro import configs
+from repro.data import tokens
+from repro.optim import adamw
+from repro.training.train import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    hp = adamw.Hparams(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                       total_steps=args.steps)
+    data = tokens.for_config(cfg, args.batch, args.seq, seed=args.seed)
+    trainer = Trainer(cfg, hp, data,
+                      TrainerConfig(checkpoint_dir=args.ckpt,
+                                    checkpoint_every=args.ckpt_every),
+                      jax.random.PRNGKey(args.seed),
+                      num_microbatches=args.microbatches)
+    start = trainer.step
+    print(f"arch={cfg.name} params={cfg.param_count():,} resume_step={start}")
+
+    def log(step, metrics):
+        if step % 10 == 0 or step == start + 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+
+    final = trainer.run(args.steps - start, on_step=log)
+    print("final:", final)
+
+
+if __name__ == "__main__":
+    main()

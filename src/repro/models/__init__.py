@@ -1,0 +1,2 @@
+"""LM model stack (pure JAX; Pallas kernels optional)."""
+from repro.models import attention, config, layers, model, moe, ssm  # noqa: F401

@@ -1,0 +1,192 @@
+"""GQA attention block: train/prefill self-attention + cached decode.
+
+Three interchangeable implementations (all numerically validated against each
+other in tests/test_models.py):
+
+  xla          — whole-logits einsum (small seqs, oracle)
+  xla_chunked  — q-chunked flash-style (lax.scan over q blocks, keys masked;
+                 peak logits memory b*h*chunk*s instead of b*h*s*s) — the
+                 default and the dry-run path
+  pallas       — repro.kernels.flash_attention (TPU runtime)
+
+GQA never materialises repeated K/V: q is reshaped to (b, kv_heads, group,
+s, dh) and contracted against the (b, kv_heads, s, dh) K/V directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec, apply_rope, rms_norm
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def specs(cfg: ModelConfig) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "wq": Spec((d, hq * dh), ("embed", "heads")),
+        "wk": Spec((d, hkv * dh), ("embed", "heads")),
+        "wv": Spec((d, hkv * dh), ("embed", "heads")),
+        "wo": Spec((hq * dh, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = Spec((hq * dh,), ("heads",), init="zeros")
+        s["bk"] = Spec((hkv * dh,), ("heads",), init="zeros")
+        s["bv"] = Spec((hkv * dh,), ("heads",), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = Spec((dh,), (None,), init="ones")
+        s["k_norm"] = Spec((dh,), (None,), init="ones")
+    return s
+
+
+def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+    b, s, _ = x.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "heads", "seq", None))
+    k = constrain(k, ("batch", "kv_heads", "seq", None))
+    v = constrain(v, ("batch", "kv_heads", "seq", None))
+    return q, k, v
+
+
+def _masked_logits(q: Array, k: Array, q_pos: Array, k_pos: Array,
+                   scale: float, window: int) -> Array:
+    """q (b,hkv,g,sq,dh), k (b,hkv,sk,dh) -> (b,hkv,g,sq,sk), causal+window."""
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(mask[None, None, None], logits, NEG_INF)
+
+
+def _attend_xla(q, k, v, cfg, scale):
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, dh)
+    pos = jnp.arange(sq)
+    logits = _masked_logits(qg, k, pos, pos, scale, cfg.sliding_window)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def _attend_xla_chunked(q, k, v, cfg, scale):
+    """lax.scan over q chunks; logits never exceed (b,h,chunk,s)."""
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    chunk = min(cfg.attn_chunk, sq)
+    if sq % chunk != 0:  # ragged fall-back (smoke shapes)
+        return _attend_xla(q, k, v, cfg, scale)
+    n_chunks = sq // chunk
+    qg = q.reshape(b, hkv, g, n_chunks, chunk, dh)
+    qg = jnp.moveaxis(qg, 3, 0)  # (nc, b, hkv, g, chunk, dh)
+    k_pos = jnp.arange(sq)
+
+    def body(carry, inp):
+        ci, q_c = inp
+        q_pos = ci * chunk + jnp.arange(chunk)
+        logits = _masked_logits(q_c, k, q_pos, k_pos, scale, cfg.sliding_window)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, 0, (jnp.arange(n_chunks), qg))
+    outs = jnp.moveaxis(outs, 0, 3)  # (b,hkv,g,nc,chunk,dh)
+    return outs.reshape(b, hkv, g, sq, dh).reshape(b, hq, sq, dh)
+
+
+def self_attention(p: dict, x: Array, cfg: ModelConfig,
+                   positions: Array | None = None,
+                   return_kv: bool = False):
+    """Full-sequence (train / prefill) attention.  x: (b, s, d)."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    scale = cfg.head_dim ** -0.5
+    impl = cfg.attention_impl
+    if impl == "pallas":
+        out = fa_ops.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                               scale=scale)
+    elif impl == "xla_chunked":
+        out = _attend_xla_chunked(q, k, v, cfg, scale)
+    else:
+        out = _attend_xla(q, k, v, cfg, scale)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    y = out @ p["wo"].astype(x.dtype)
+    y = constrain(y, ("batch", "seq", None))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def decode_attention(p: dict, x: Array, cfg: ModelConfig, cache: tuple,
+                     index: Array):
+    """One-token decode.  x: (b, 1, d); cache (k, v): (b, hkv, S, dh) ring
+    buffers (SWA archs allocate S = window) — raw arrays or int8
+    serving/kv_quant.QuantizedKV; index: current position."""
+    from repro.serving import kv_quant
+    b, _, d = x.shape
+    k_cache, v_cache = cache
+    quantized = isinstance(k_cache, kv_quant.QuantizedKV)
+    S = (k_cache.q if quantized else k_cache).shape[2]
+    window = cfg.sliding_window
+    slot = (index % S if window > 0 else index).astype(jnp.int32)
+    positions = index[None].astype(jnp.int32)  # rope uses absolute position
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    if quantized:
+        k_cache = kv_quant.update_row(k_cache, k_new, slot)
+        v_cache = kv_quant.update_row(v_cache, v_new, slot)
+        k_attn = kv_quant.dequantize(k_cache, jnp.float32)
+        v_attn = kv_quant.dequantize(v_cache, jnp.float32)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, 0, slot, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, 0, slot, 0))
+        k_cache = constrain(k_cache, ("batch", "kv_heads", "seq_kv", None))
+        v_cache = constrain(v_cache, ("batch", "kv_heads", "seq_kv", None))
+        k_attn, v_attn = k_cache, v_cache
+
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, 1, dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k_attn.astype(jnp.float32)) * dh ** -0.5
+    # valid cache slots: ring for SWA (all written slots live), prefix else
+    slot_ids = jnp.arange(S)
+    if window > 0:
+        valid = slot_ids < jnp.minimum(index + 1, S)
+    else:
+        valid = slot_ids <= index
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs,
+                     v_attn.astype(jnp.float32))
+    out = out.reshape(b, hq, 1, dh).transpose(0, 2, 1, 3).reshape(b, 1, hq * dh)
+    y = out.astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return y, (k_cache, v_cache)

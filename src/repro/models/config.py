@@ -1,0 +1,182 @@
+"""Model / shape configuration for the assigned LM architectures.
+
+One ModelConfig covers every family in the pool:
+
+  dense   — GQA/MHA transformer (llama3.2, qwen3, qwen1.5, stablelm,
+            musicgen backbone, llava backbone)
+  moe     — dense attention + top-k routed experts (mixtral 8x7b / 8x22b)
+  ssm     — Mamba2 / SSD, attention-free (mamba2-130m)
+  hybrid  — Mamba2 backbone with a periodically applied *shared* attention
+            block (zamba2-7b)
+
+ShapeSpec mirrors the assigned input-shape pool (train_4k / prefill_32k /
+decode_32k / long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid
+    num_layers: int
+    d_model: int
+    vocab_size: int
+
+    # attention (dense/moe/hybrid)
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qk_norm: bool = False            # qwen3-style per-head RMSNorm on q, k
+    qkv_bias: bool = False           # qwen1.5-style bias on qkv projections
+    rope_theta: float = 10_000.0
+    sliding_window: int = -1         # >0 -> SWA (mixtral)
+
+    # mlp
+    d_ff: int = 0                    # SwiGLU hidden size (dense path)
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1024       # GShard dispatch group (tokens)
+
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    attn_every: int = 0              # hybrid: shared attn before every k-th layer
+
+    # io
+    inputs_embeds: bool = False      # audio/vlm stubs feed embeddings directly
+    tie_embeddings: bool = True
+
+    # numerics / execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"              # none | dots | full
+    scan_layers: bool = True
+    attention_impl: str = "xla_chunked"  # xla | xla_chunked | pallas
+    attn_chunk: int = 1024           # q-chunk for xla_chunked
+    norm_eps: float = 1e-5
+    gather_weights: bool = False     # FSDP: all-gather weights just-in-time
+    #   inside the layer body (ZeRO-3 style) instead of letting GSPMD pick —
+    #   prevents partial-sum all-reduce of ACTIVATIONS when a weight's
+    #   contracting dim carries the fsdp axis (§Perf cell A iteration 4)
+    kv_cache_quant: bool = False     # serve KV caches as int8 + per-row
+    #   absmax scales (serving/kv_quant.py): 2x cache memory, <1% attn error
+
+    def __post_init__(self):
+        if self.n_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ---- derived sizes ------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a 128 multiple: TPU lane alignment + even
+        16-way TP sharding (e.g. mamba2's 50280).  Padded logit columns are
+        masked to -inf; labels never reference them."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs and docs)."""
+        d, v = self.d_model, self.vocab_size
+        n = v * d  # embedding
+        if not self.tie_embeddings:
+            n += v * d
+        per_layer = 0
+        if self.family in ("dense", "moe"):
+            per_layer += self._attn_params() + 2 * d  # 2 norms
+            if self.family == "dense":
+                per_layer += 3 * d * self.d_ff
+            else:
+                per_layer += self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+            n += self.num_layers * per_layer
+        elif self.family == "ssm":
+            n += self.num_layers * (self._mamba_params() + d)
+        elif self.family == "hybrid":
+            n_attn_sites = self.num_layers // max(self.attn_every, 1)
+            n_mamba = self.num_layers - n_attn_sites
+            n += n_mamba * (self._mamba_params() + d)
+            n += self._attn_params() + 3 * d * self.d_ff + 2 * d  # ONE shared block
+        n += d  # final norm
+        return n
+
+    def _attn_params(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        return d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+
+    def _mamba_params(self) -> int:
+        d, di, s = self.d_model, self.d_inner, self.ssm_state
+        h = self.n_ssm_heads
+        in_proj = d * (2 * di + 2 * s + h)       # z, x, B, C, dt
+        conv = self.ssm_conv_width * (di + 2 * s)
+        return in_proj + conv + 2 * h + di + di * d  # A_log, D, gate-norm, out
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        dense_like = self.param_count() - self.num_layers * (
+            self.n_experts - self.top_k) * 3 * d * self.d_ff
+        return dense_like
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; (False, reason) for skips.
+
+    long_500k requires sub-quadratic attention state: SSM (O(1)), hybrid
+    (SSM + a handful of shared-attn KV slots), or sliding-window (O(window)).
+    Pure full-attention archs are skipped per the brief.
+    """
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid"):
+            return True, ""
+        if cfg.sliding_window > 0:
+            return True, "SWA ring cache (O(window) state)"
+        return False, "pure full attention: 500k dense KV cache is quadratic-in-context state"
+    return True, ""

@@ -1,0 +1,133 @@
+"""Shared NN building blocks + the param-spec system.
+
+A model is described by a nested dict of ``Spec`` leaves (shape, logical
+sharding axes, init).  From one spec tree we derive:
+
+  * ``init_params``     — materialised arrays (smoke tests / real training)
+  * ``abstract_params`` — ShapeDtypeStructs w/ NamedShardings (dry-run: the
+                          141B-param configs are never allocated)
+  * ``axes_tree``       — logical axes for optimizer-state sharding
+
+so shapes, shardings and initialisation can never drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"    # normal | zeros | ones | ssm_a_log | ssm_dt_bias
+    scale: float = 1.0      # for normal: stddev multiplier on 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _materialise(key: Array, spec: Spec, dtype) -> Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a_log":
+        # A = -exp(A_log) with A_log ~ log U[1, 16]  (Mamba2 default)
+        u = jax.random.uniform(key, spec.shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt_bias":
+        # dt ~ U[1e-3, 1e-1] through inverse softplus
+        u = jax.random.uniform(key, spec.shape, minval=math.log(1e-3),
+                               maxval=math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+
+
+def init_params(key: Array, specs, dtype) -> dict:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_materialise(k, s, dtype) for k, s in zip(keys, leaves)])
+
+
+def abstract_params(specs, dtype, with_sharding: bool = True):
+    act = shd.active() if with_sharding else None
+
+    def mk(s: Spec):
+        if act is None:
+            return jax.ShapeDtypeStruct(s.shape, dtype)
+        return jax.ShapeDtypeStruct(s.shape, dtype,
+                                    sharding=act.sharding(s.axes, s.shape))
+
+    return jax.tree.map(mk, specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(math.prod(s.shape) for s in
+               jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+# ---------------------------------------------------------------- NN ops ----
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight.astype(dt)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (b, h, s, dh); positions: (s,) or (b, s)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, dh/2)
+    if angles.ndim == 2:                               # (s, dh/2) -> bcast b,h
+        angles = angles[None, None]
+    else:                                              # (b, s, dh/2)
+        angles = angles[:, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean token NLL in fp32; logits (..., v) may be vocab-sharded (GSPMD
+    inserts the model-axis reductions for the max / logsumexp)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    gold = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

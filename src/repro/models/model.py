@@ -1,0 +1,525 @@
+"""LM assembly: embedding -> (scanned) blocks -> norm -> logits.
+
+Families:
+  dense   — [attn + SwiGLU] x L
+  moe     — [attn + routed-MoE] x L                  (aux loss threaded out)
+  ssm     — [mamba2] x L
+  hybrid  — repeating unit of (attn_every-1) mamba2 layers followed by ONE
+            globally *shared* attention+MLP block (zamba2); tail mamba layers
+            if L % attn_every != 0.
+
+All layer stacks run through ``_scan`` — lax.scan over stacked params when
+cfg.scan_layers (compile time O(1) in depth; the production path) or an
+unrolled Python loop otherwise.  The unrolled path exists because XLA's cost
+analysis counts a while-loop body ONCE; the dry-run extrapolates exact FLOPs
+/ bytes / collective counts from unrolled depth-1/depth-2 compiles (see
+launch/dryrun.py) while the scanned compile proves memory feasibility.
+
+Prefill returns last-token logits + caches; decode_step consumes/updates
+caches (KV ring for SWA, SSM state for mamba) — O(1) per token for SSM
+archs, which is what makes the long_500k cells runnable.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention, moe, ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import (Spec, cross_entropy, init_params, rms_norm,
+                                 swiglu)
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------ specs --
+def _stack(specs, n: int):
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def _mlp_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": Spec((d, f), ("embed", "mlp")),
+        "w_up": Spec((d, f), ("embed", "mlp")),
+        "w_down": Spec((f, d), ("mlp", "embed")),
+    }
+
+
+def _attn_block_specs(cfg: ModelConfig, mlp: bool = True) -> dict:
+    s = {
+        "ln1": Spec((cfg.d_model,), ("norm",), init="ones"),
+        "attn": attention.specs(cfg),
+        "ln2": Spec((cfg.d_model,), ("norm",), init="ones"),
+    }
+    if mlp:
+        s["mlp"] = _mlp_specs(cfg)
+    return s
+
+
+def _moe_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": Spec((cfg.d_model,), ("norm",), init="ones"),
+        "attn": attention.specs(cfg),
+        "ln2": Spec((cfg.d_model,), ("norm",), init="ones"),
+        "moe": moe.specs(cfg),
+    }
+
+
+def _ssm_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln": Spec((cfg.d_model,), ("norm",), init="ones"),
+        "ssm": ssm.specs(cfg),
+    }
+
+
+def hybrid_counts(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, mamba_per_group, n_tail) for the hybrid layout."""
+    k = cfg.attn_every
+    n_groups = cfg.num_layers // k
+    tail = cfg.num_layers - n_groups * k
+    return n_groups, k - 1, tail
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    s: dict[str, Any] = {
+        "embed": Spec((v, d), ("vocab", "embed")),
+        "final_norm": Spec((d,), ("norm",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = Spec((d, v), ("embed", "vocab"))
+    if cfg.family == "dense":
+        s["layers"] = _stack(_attn_block_specs(cfg), cfg.num_layers)
+    elif cfg.family == "moe":
+        s["layers"] = _stack(_moe_block_specs(cfg), cfg.num_layers)
+    elif cfg.family == "ssm":
+        s["layers"] = _stack(_ssm_block_specs(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        ng, per, tail = hybrid_counts(cfg)
+        s["mamba_groups"] = _stack(_stack(_ssm_block_specs(cfg), per), ng)
+        if tail:
+            s["mamba_tail"] = _stack(_ssm_block_specs(cfg), tail)
+        s["shared"] = _attn_block_specs(cfg)
+    else:
+        raise ValueError(cfg.family)
+    return s
+
+
+def init(key: Array, cfg: ModelConfig) -> dict:
+    return init_params(key, model_specs(cfg), cfg.pdtype)
+
+
+# ------------------------------------------------------------------ blocks --
+def _gather_axes(cfg: ModelConfig, key: str):
+    """Per-leaf logical axes for one layer (leading 'layers' axes dropped)
+    with the fsdp ('embed') axis cleared — constraining a weight to these
+    axes all-gathers its fsdp shards just-in-time."""
+    spec = model_specs(cfg)[key]
+
+    def leaf(s: Spec):
+        ax = s.axes
+        while ax and ax[0] == "layers":
+            ax = ax[1:]
+        return tuple(None if a == "embed" else a for a in ax)
+
+    return jax.tree.map(leaf, spec, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def _maybe_gather(lp, gaxes, cfg: ModelConfig):
+    if not cfg.gather_weights:
+        return lp
+    return jax.tree.map(lambda w, ax: constrain(w, ax), lp, gaxes)
+
+
+def _scan(body, carry, xs, use_scan: bool):
+    """lax.scan or an unrolled Python loop with identical semantics."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def _dense_block(p, x, cfg):
+    x = x + attention.self_attention(p["attn"],
+                                     rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + swiglu(h, p["mlp"]["w_gate"].astype(h.dtype),
+                   p["mlp"]["w_up"].astype(h.dtype),
+                   p["mlp"]["w_down"].astype(h.dtype))
+    return constrain(x, ("batch", "seq", None))
+
+
+def _moe_block(p, x, cfg):
+    x = x + attention.self_attention(p["attn"],
+                                     rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+    y, aux = moe.block(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return constrain(x + y, ("batch", "seq", None)), aux
+
+
+def _ssm_block(p, x, cfg):
+    x = x + ssm.block(p["ssm"], rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+    return constrain(x, ("batch", "seq", None))
+
+
+def _run_layers(params, x, cfg: ModelConfig):
+    """Full-sequence stack; returns (x, aux_loss)."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe"):
+        gaxes = _gather_axes(cfg, "layers") if cfg.gather_weights else None
+
+        def body(carry, lp):
+            x, aux = carry
+            lp = _maybe_gather(lp, gaxes, cfg)
+            if cfg.family == "dense":
+                x = _dense_block(lp, x, cfg)
+            else:
+                x, a = _moe_block(lp, x, cfg)
+                aux = aux + a
+            return (x, aux), None
+        body = _remat(body, cfg)
+        (x, aux), _ = _scan(body, (x, aux0), params["layers"],
+                            cfg.scan_layers)
+        return x, aux
+
+    if cfg.family == "ssm":
+        gaxes = _gather_axes(cfg, "layers") if cfg.gather_weights else None
+
+        def body(carry, lp):
+            lp = _maybe_gather(lp, gaxes, cfg)
+            return (_ssm_block(lp, carry[0], cfg), carry[1]), None
+        body = _remat(body, cfg)
+        (x, _), _ = _scan(body, (x, aux0), params["layers"], cfg.scan_layers)
+        return x, aux0
+
+    # hybrid (zamba2): groups of mamba layers punctuated by the shared block
+    gaxes = (_gather_axes(cfg, "mamba_groups") if cfg.gather_weights else None)
+    shared = params["shared"]
+    if cfg.gather_weights:
+        shared = _maybe_gather(shared, _gather_axes(cfg, "shared"), cfg)
+
+    def mamba_body(carry, lp):
+        lp = _maybe_gather(lp, gaxes, cfg)
+        return (_ssm_block(lp, carry[0], cfg), carry[1]), None
+    mamba_body = _remat(mamba_body, cfg)
+
+    def shared_block(x):
+        return _dense_block(shared, x, cfg)
+    shared_block = _remat(shared_block, cfg)
+
+    def group_body(carry, gp):
+        x, aux = carry
+        (x, aux), _ = _scan(mamba_body, (x, aux), gp, cfg.scan_layers)
+        x = shared_block(x)
+        return (x, aux), None
+
+    (x, _), _ = _scan(group_body, (x, aux0), params["mamba_groups"],
+                      cfg.scan_layers)
+    if "mamba_tail" in params:
+        (x, _), _ = _scan(mamba_body, (x, aux0), params["mamba_tail"],
+                          cfg.scan_layers)
+    return x, aux0
+
+
+# ----------------------------------------------------------------- forward --
+def _embed(params, inputs, cfg: ModelConfig) -> Array:
+    if cfg.inputs_embeds:
+        x = inputs.astype(cfg.cdtype)
+    else:
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.cdtype)
+    return constrain(x, ("batch", "seq", None))
+
+
+def _logits(params, x, cfg: ModelConfig) -> Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask alignment-padding columns
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size,
+                           logits, jnp.finfo(logits.dtype).min / 2)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def forward(params, inputs, cfg: ModelConfig) -> tuple[Array, Array]:
+    """inputs: (b, s) int tokens or (b, s, d) embeddings -> (logits, aux)."""
+    x = _embed(params, inputs, cfg)
+    x, aux = _run_layers(params, x, cfg)
+    return _logits(params, x, cfg), aux
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig,
+            aux_weight: float = 0.01) -> tuple[Array, dict]:
+    logits, aux = forward(params, batch["inputs"], cfg)
+    nll = cross_entropy(logits, batch["labels"])
+    loss = nll + aux_weight * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ------------------------------------------------------------------- serve --
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window > 0:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Zeroed cache pytree sized for decoding up to seq_len positions."""
+    from repro.serving import kv_quant
+    S = cache_len(cfg, seq_len)
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+    dtype = cfg.cdtype
+
+    def one_kv(n):
+        shape = (n, batch, hkv, S, dh)
+        if cfg.kv_cache_quant:
+            return kv_quant.QuantizedKV(q=jnp.zeros(shape, jnp.int8),
+                                        scale=jnp.zeros(shape[:-1],
+                                                        jnp.bfloat16))
+        return jnp.zeros(shape, dtype)
+
+    def kv(n):
+        return {"k": one_kv(n), "v": one_kv(n)}
+
+    def ssm_stack(n):
+        one = ssm.init_cache(cfg, batch, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    if cfg.family in ("dense", "moe"):
+        return kv(cfg.num_layers)
+    if cfg.family == "ssm":
+        return ssm_stack(cfg.num_layers)
+    ng, per, tail = hybrid_counts(cfg)
+    caches = {"mamba_groups": ssm_stack(ng * per), "attn": kv(ng)}
+    if tail:
+        caches["mamba_tail"] = ssm_stack(tail)
+    return caches
+
+
+def _constrain_kv(c):
+    from repro.serving import kv_quant
+    axes = ("layers", "batch", "kv_heads", "seq_kv", None)
+
+    def one(kv_like):
+        if isinstance(kv_like, kv_quant.QuantizedKV):
+            return kv_quant.QuantizedKV(q=constrain(kv_like.q, axes),
+                                        scale=constrain(kv_like.scale,
+                                                        axes[:-1]))
+        return constrain(kv_like, axes)
+
+    c = dict(c)
+    c["k"] = one(c["k"])
+    c["v"] = one(c["v"])
+    return c
+
+
+def decode_step(params, inputs, caches: dict, index: Array,
+                cfg: ModelConfig) -> tuple[Array, dict]:
+    """One-token serve step.
+
+    inputs: (b, 1) token ids or (b, 1, d) embeddings; index: scalar position
+    of the new token; caches as produced by init_caches / prefill.
+    Returns (logits (b, 1, vocab), new caches).
+    """
+    x = _embed(params, inputs, cfg)
+
+    if cfg.family in ("dense", "moe"):
+        caches = _constrain_kv(caches)
+
+        def body(x, inp):
+            lp, k_c, v_c = inp
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, (k_c, v_c) = attention.decode_attention(
+                lp["attn"], h, cfg, (k_c, v_c), index)
+            x = x + y
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "dense":
+                x = x + swiglu(h, lp["mlp"]["w_gate"].astype(h.dtype),
+                               lp["mlp"]["w_up"].astype(h.dtype),
+                               lp["mlp"]["w_down"].astype(h.dtype))
+            else:
+                y, _ = moe.block(lp["moe"], h, cfg)
+                x = x + y
+            return x, (k_c, v_c)
+
+        x, kv_new = _scan(body, x, (params["layers"], caches["k"],
+                                    caches["v"]), cfg.scan_layers)
+        new_caches = _constrain_kv({"k": kv_new[0], "v": kv_new[1]})
+        return _logits(params, x, cfg), new_caches
+
+    if cfg.family == "ssm":
+        def body(x, inp):
+            lp, c = inp
+            h = rms_norm(x, lp["ln"], cfg.norm_eps)
+            y, c = ssm.decode_step(lp["ssm"], h, cfg, c)
+            return x + y, c
+
+        x, new_c = _scan(body, x, (params["layers"], caches),
+                         cfg.scan_layers)
+        return _logits(params, x, cfg), new_c
+
+    # hybrid
+    ng, per, tail = hybrid_counts(cfg)
+    shared = params["shared"]
+    attn_caches = _constrain_kv(caches["attn"])
+
+    def mamba_body(x, inp):
+        lp, c = inp
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, c = ssm.decode_step(lp["ssm"], h, cfg, c)
+        return x + y, c
+
+    def group_body(x, inp):
+        gp, gc, k_c, v_c = inp
+        x, gc = _scan(mamba_body, x, (gp, gc), cfg.scan_layers)
+        h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+        y, (k_c, v_c) = attention.decode_attention(
+            shared["attn"], h, cfg, (k_c, v_c), index)
+        x = x + y
+        h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, shared["mlp"]["w_gate"].astype(h.dtype),
+                       shared["mlp"]["w_up"].astype(h.dtype),
+                       shared["mlp"]["w_down"].astype(h.dtype))
+        return x, (gc, k_c, v_c)
+
+    group_mamba = jax.tree.map(
+        lambda a: a.reshape((ng, per) + a.shape[1:]), caches["mamba_groups"])
+    x, (gc_new, k_new, v_new) = _scan(
+        group_body, x,
+        (params["mamba_groups"], group_mamba, attn_caches["k"],
+         attn_caches["v"]), cfg.scan_layers)
+    new_caches = {
+        "mamba_groups": jax.tree.map(
+            lambda a: a.reshape((ng * per,) + a.shape[2:]), gc_new),
+        "attn": _constrain_kv({"k": k_new, "v": v_new}),
+    }
+    if tail:
+        x, tail_new = _scan(mamba_body, x,
+                            (params["mamba_tail"], caches["mamba_tail"]),
+                            cfg.scan_layers)
+        new_caches["mamba_tail"] = tail_new
+    return _logits(params, x, cfg), new_caches
+
+
+def prefill(params, inputs, cfg: ModelConfig,
+            cache_seq_len: Optional[int] = None) -> tuple[Array, dict]:
+    """Process a prompt; returns (last-token logits, caches at len(prompt)).
+
+    Caches are allocated at cache_seq_len (defaults to the prompt length) so
+    decode can continue in place.
+    """
+    if cfg.inputs_embeds:
+        b, s = inputs.shape[:2]
+    else:
+        b, s = inputs.shape
+    S = cache_seq_len or s
+    x = _embed(params, inputs, cfg)
+
+    def pad_kv(k):  # (b, hkv, s, dh) -> (b, hkv, S_cache, dh)
+        Sc = cache_len(cfg, S)
+        if cfg.sliding_window > 0 and s > Sc:
+            # ring semantics: token p lives at slot p % Sc
+            k = jnp.roll(k[:, :, s - Sc:, :], shift=s % Sc, axis=2)
+        return jnp.pad(k, ((0, 0), (0, 0), (0, Sc - min(s, Sc)), (0, 0)))
+
+    def emit_kv(k):
+        k = pad_kv(k).astype(cfg.cdtype)
+        if cfg.kv_cache_quant:
+            from repro.serving import kv_quant
+            return kv_quant.quantize(k)
+        return k
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, lp):
+            x = carry
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, (k, v) = attention.self_attention(lp["attn"], h, cfg,
+                                                 return_kv=True)
+            x = x + y
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "dense":
+                x = x + swiglu(h, lp["mlp"]["w_gate"].astype(h.dtype),
+                               lp["mlp"]["w_up"].astype(h.dtype),
+                               lp["mlp"]["w_down"].astype(h.dtype))
+            else:
+                y, _ = moe.block(lp["moe"], h, cfg)
+                x = x + y
+            x = constrain(x, ("batch", "seq", None))
+            return x, (emit_kv(k), emit_kv(v))
+
+        body = _remat(body, cfg)
+        x, kv = _scan(body, x, params["layers"], cfg.scan_layers)
+        caches = _constrain_kv({"k": kv[0], "v": kv[1]})
+        return _logits(params, x[:, -1:], cfg), caches
+
+    if cfg.family == "ssm":
+        def body(x, lp):
+            h = rms_norm(x, lp["ln"], cfg.norm_eps)
+            y, c = ssm.block(lp["ssm"], h, cfg, return_state=True)
+            return x + y, c
+
+        body = _remat(body, cfg)
+        x, states = _scan(body, x, params["layers"], cfg.scan_layers)
+        return _logits(params, x[:, -1:], cfg), states
+
+    # hybrid: collect mamba states per group + shared-attn KV per site
+    ng, per, tail = hybrid_counts(cfg)
+    shared = params["shared"]
+
+    def mamba_body(x, lp):
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, c = ssm.block(lp["ssm"], h, cfg, return_state=True)
+        return x + y, c
+    mamba_body = _remat(mamba_body, cfg)
+
+    def group_body(x, gp):
+        x, states = _scan(mamba_body, x, gp, cfg.scan_layers)
+        h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+        y, (k, v) = attention.self_attention(shared["attn"], h, cfg,
+                                             return_kv=True)
+        x = x + y
+        h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, shared["mlp"]["w_gate"].astype(h.dtype),
+                       shared["mlp"]["w_up"].astype(h.dtype),
+                       shared["mlp"]["w_down"].astype(h.dtype))
+        x = constrain(x, ("batch", "seq", None))
+        return x, (states, emit_kv(k), emit_kv(v))
+
+    x, (gstates, ks, vs) = _scan(group_body, x, params["mamba_groups"],
+                                 cfg.scan_layers)
+    caches = {
+        "mamba_groups": jax.tree.map(
+            lambda a: a.reshape((ng * per,) + a.shape[2:]), gstates),
+        "attn": _constrain_kv({"k": ks, "v": vs}),
+    }
+    if tail:
+        x, tstates = _scan(mamba_body, x, params["mamba_tail"],
+                           cfg.scan_layers)
+        caches["mamba_tail"] = tstates
+    return _logits(params, x[:, -1:], cfg), caches

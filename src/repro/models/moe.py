@@ -1,0 +1,93 @@
+"""Top-k routed MoE (Mixtral-style) with GShard grouped-capacity dispatch.
+
+Tokens are split into groups of ``moe_group_size``; within each group every
+expert accepts at most c = ceil(top_k * capacity_factor * g / E) tokens
+(overflow dropped, standard GShard semantics).  The dispatch/combine tensors
+are (G, g, E, c) one-hots, so peak memory is top_k*cf*T*g elements — linear
+in tokens for fixed g — instead of the quadratic T*E*c_full of ungrouped
+dispatch.  All dispatch math is einsum (MXU-friendly, GSPMD-partitionable):
+
+  expert_in  = einsum('Ggec,Ggd->Gecd', dispatch, x)
+  expert_mid = swiglu per expert                       (e sliced or TP on f)
+  y          = einsum('Ggec,Gecd->Ggd', combine, expert_out)
+
+Sharding: groups G follow the batch axis (DP); d_ff follows 'mlp' (TP).  With
+8 experts on a 16-way model axis the expert dim is *not* divisible, so the
+default rule keeps experts unsharded and slices d_ff ("expert-sliced TP",
+DESIGN.md §5); the hillclimb evaluates the alternative factorisation.
+
+Aux load-balance loss (Switch-style) is returned for the trainer.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec
+
+Array = jax.Array
+
+
+def specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": Spec((d, e), ("embed", "experts")),
+        "w_gate": Spec((e, d, f), ("experts", "embed", "mlp")),
+        "w_up": Spec((e, d, f), ("experts", "embed", "mlp")),
+        "w_down": Spec((e, f, d), ("experts", "mlp", "embed")),
+    }
+
+
+def block(p: dict, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    """x: (b, s, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = b * s
+    g = min(cfg.moe_group_size, tokens)
+    while tokens % g != 0:  # largest divisor <= moe_group_size
+        g -= 1
+    n_groups = tokens // g
+    cap = max(1, math.ceil(k * cfg.capacity_factor * g / e))
+    xt = x.reshape(n_groups, g, d)
+    xt = constrain(xt, ("batch", None, None))
+
+    logits = xt @ p["router"].astype(xt.dtype)            # (G, g, e)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                  # (G, g, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)   # renormalise top-k
+
+    # aux load-balance loss: E * sum_e mean(frac_tokens_e * mean_prob_e)
+    me = jnp.mean(probs, axis=1)                                   # (G, e)
+    one_hot_all = jax.nn.one_hot(topi, e, dtype=jnp.float32)       # (G,g,k,e)
+    ce = jnp.mean(jnp.sum(one_hot_all, axis=2), axis=1) / k        # (G, e)
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # position of each (token, choice) in its expert's buffer
+    flat_hot = one_hot_all.reshape(n_groups, g * k, e)
+    pos_in_expert = jnp.cumsum(flat_hot, axis=1) - flat_hot        # (G, gk, e)
+    pos = jnp.sum(pos_in_expert * flat_hot, axis=-1).reshape(n_groups, g, k)
+    keep = pos < cap                                               # capacity
+    w = topw * keep.astype(topw.dtype)
+
+    # dispatch/combine one-hots over the capacity slots
+    pos_hot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                             dtype=jnp.float32)                    # (G,g,k,c)
+    disp = jnp.einsum("Ggke,Ggkc->Ggec", one_hot_all,
+                      pos_hot)                                     # (G,g,e,c)
+    comb = jnp.einsum("Ggk,Ggke,Ggkc->Ggec", w, one_hot_all, pos_hot)
+
+    cd = xt.dtype
+    expert_in = jnp.einsum("Ggec,Ggd->Gecd", disp.astype(cd), xt)
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+    gate = jnp.einsum("Gecd,edf->Gecf", expert_in, p["w_gate"].astype(cd))
+    up = jnp.einsum("Gecd,edf->Gecf", expert_in, p["w_up"].astype(cd))
+    mid = jax.nn.silu(gate) * up
+    mid = constrain(mid, ("batch", "experts", None, "mlp"))
+    expert_out = jnp.einsum("Gecf,efd->Gecd", mid, p["w_down"].astype(cd))
+    y = jnp.einsum("Ggec,Gecd->Ggd", comb.astype(cd), expert_out)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,162 @@
+"""Mamba2 (SSD) sequence-mixing block — full-sequence and recurrent decode.
+
+Structure (ngroups = 1, following the Mamba2 reference):
+
+  z, x, B, C, dt = separate projections of the input        (d -> 2di+2s+h)
+  x, B, C <- silu(causal depthwise conv_w4(.))
+  dt      <- softplus(dt + dt_bias)           per SSM head
+  a_log   <- -exp(A_log) * dt                 (log decay, <= 0)
+  y       <- SSD(x * dt, a_log, B, C) + D * x
+  out     <- out_proj( RMSNorm(y) * silu(z) )
+
+Full-sequence mixing runs the chunked SSD (XLA ref or the Pallas kernel);
+decode keeps O(1) state per layer: the (h, p, s) SSM state plus a
+(conv_width-1)-deep conv ring — this is what makes long_500k decode feasible
+for the SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec, rms_norm
+
+Array = jax.Array
+
+
+def specs(cfg: ModelConfig) -> dict:
+    d, di, s = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, w = cfg.n_ssm_heads, cfg.ssm_conv_width
+    return {
+        "wz": Spec((d, di), ("embed", "mlp")),
+        "wx": Spec((d, di), ("embed", "mlp")),
+        "wB": Spec((d, s), ("embed", None)),
+        "wC": Spec((d, s), ("embed", None)),
+        "wdt": Spec((d, h), ("embed", None)),
+        "conv_x": Spec((w, di), (None, "mlp"), init="normal", scale=1.0),
+        "conv_B": Spec((w, s), (None, None)),
+        "conv_C": Spec((w, s), (None, None)),
+        "A_log": Spec((h,), (None,), init="ssm_a_log"),
+        "dt_bias": Spec((h,), (None,), init="ssm_dt_bias"),
+        "D": Spec((h,), (None,), init="ones"),
+        "norm": Spec((di,), ("mlp",), init="ones"),
+        "wo": Spec((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv; x (b, l, c), w (width, c)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out
+
+
+def _conv_step(state: Array, x_new: Array, w: Array) -> tuple[Array, Array]:
+    """Recurrent conv step; state (b, width-1, c), x_new (b, c)."""
+    window = jnp.concatenate([state, x_new[:, None, :]], axis=1)  # (b, w, c)
+    out = jnp.sum(window * w[None].astype(x_new.dtype), axis=1)
+    return window[:, 1:, :], out
+
+
+def _gates(p: dict, u: Array, cfg: ModelConfig):
+    cd = u.dtype
+    z = u @ p["wz"].astype(cd)
+    x = u @ p["wx"].astype(cd)
+    B = u @ p["wB"].astype(cd)
+    C = u @ p["wC"].astype(cd)
+    dt_raw = u @ p["wdt"].astype(cd)
+    return z, x, B, C, dt_raw
+
+
+def _discretise(p: dict, dt_raw: Array):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt  # (..., h) <= 0
+    return dt, a_log
+
+
+def block(p: dict, u: Array, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence mixing.  u: (b, l, d) -> (b, l, d) [, final cache].
+
+    With return_state=True also computes the end-of-sequence recurrent cache
+    (SSM state + conv rings) so decode can continue after a prefill:
+      S_end = sum_j exp(A_total - A_cum_j) (dt_j x_j) (x) B_j   (fp32 einsum).
+    """
+    b, l, d = u.shape
+    h, pd = cfg.n_ssm_heads, cfg.ssm_headdim
+    z, x, B, C, dt_raw = _gates(p, u, cfg)
+    x_pre, B_pre, C_pre = x, B, C
+    x = jax.nn.silu(_causal_conv(x, p["conv_x"]))
+    B = jax.nn.silu(_causal_conv(B, p["conv_B"]))
+    C = jax.nn.silu(_causal_conv(C, p["conv_C"]))
+    x = constrain(x, ("batch", "seq", "mlp"))
+    dt, a_log = _discretise(p, dt_raw)                       # (b, l, h)
+    xh = x.reshape(b, l, h, pd)
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y = ssd_ops.ssd(
+        xdt, a_log, B, C,
+        use_pallas=(cfg.attention_impl == "pallas"),
+    )
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, l, cfg.d_inner)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["wo"].astype(y.dtype)
+    out = constrain(out, ("batch", "seq", None))
+    if not return_state:
+        return out
+    a_cum = jnp.cumsum(a_log, axis=1)                        # (b, l, h)
+    decay = jnp.exp(a_cum[:, -1:, :] - a_cum)                # <= 1
+    S_end = jnp.einsum("blh,blhp,bls->bhps",
+                       decay, xdt.astype(jnp.float32),
+                       B.astype(jnp.float32))
+    w = cfg.ssm_conv_width
+    cache = {
+        "ssm": S_end,
+        "conv_x": x_pre[:, l - (w - 1):, :].astype(u.dtype),
+        "conv_B": B_pre[:, l - (w - 1):, :].astype(u.dtype),
+        "conv_C": C_pre[:, l - (w - 1):, :].astype(u.dtype),
+    }
+    return out, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    """Per-layer recurrent state for decode."""
+    h, pd, s = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    w = cfg.ssm_conv_width
+    di = cfg.d_inner
+    return {
+        "ssm": jnp.zeros((batch, h, pd, s), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, cfg.ssm_state), dtype),
+    }
+
+
+def decode_step(p: dict, u: Array, cfg: ModelConfig, cache: dict):
+    """One-token recurrent step.  u: (b, 1, d) -> (y (b,1,d), new cache)."""
+    b = u.shape[0]
+    h, pd = cfg.n_ssm_heads, cfg.ssm_headdim
+    z, x, B, C, dt_raw = _gates(p, u[:, 0, :], cfg)
+    cx, x = _conv_step(cache["conv_x"], x, p["conv_x"])
+    cB, B = _conv_step(cache["conv_B"], B, p["conv_B"])
+    cC, C = _conv_step(cache["conv_C"], C, p["conv_C"])
+    x, B, C = jax.nn.silu(x), jax.nn.silu(B), jax.nn.silu(C)
+    dt, a_log = _discretise(p, dt_raw)                       # (b, h)
+    xh = x.reshape(b, h, pd).astype(jnp.float32)
+    S = cache["ssm"] * jnp.exp(a_log)[..., None, None]
+    S = S + jnp.einsum("bhp,bs->bhps", xh * dt[..., None],
+                       B.astype(jnp.float32))
+    y = jnp.einsum("bhps,bs->bhp", S, C.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ p["wo"].astype(y.dtype)).reshape(b, 1, -1)
+    new_cache = {"ssm": S, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return out, new_cache

@@ -1,0 +1,114 @@
+"""AdamW + schedules, pure JAX (no optax in this container).
+
+The moment tensors inherit each parameter's sharding (elementwise ops), so
+with FSDP-sharded weights the optimizer state is automatically ZeRO-sharded —
+no separate partitioner is needed.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array          # ()
+    mu: dict             # fp32, same tree as params
+    nu: dict             # fp32
+    master: dict | None = None   # fp32 master weights (bf16-params training)
+
+
+class Hparams(NamedTuple):
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_weights: bool = False  # keep fp32 masters when params are bf16
+
+
+def init(params, hp: Hparams | None = None) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = None
+    if hp is not None and hp.master_weights:
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      master=master)
+
+
+def abstract_init(abstract_params, hp: Hparams | None = None) -> AdamWState:
+    """ShapeDtypeStruct mirror of init() for dry-run lowering."""
+    mk = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                        sharding=getattr(p, "sharding", None))
+    master = None
+    if hp is not None and hp.master_weights:
+        master = jax.tree.map(mk, abstract_params)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=jax.tree.map(mk, abstract_params),
+                      nu=jax.tree.map(mk, abstract_params),
+                      master=master)
+
+
+def cosine_lr(step: Array, hp: Hparams) -> Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(hp.warmup_steps, 1)
+    frac = jnp.clip((step - hp.warmup_steps)
+                    / max(hp.total_steps - hp.warmup_steps, 1), 0.0, 1.0)
+    cos = hp.min_lr_ratio + (1 - hp.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(math.pi * frac))
+    return hp.peak_lr * jnp.where(step < hp.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def update(grads, state: AdamWState, params, hp: Hparams):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, hp.clip_norm)
+    step = state.step + 1
+    lr = cosine_lr(step, hp)
+    b1, b2 = hp.b1, hp.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    masters = state.master if state.master is not None else params
+
+    def upd(p, w32, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + hp.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + hp.weight_decay * w32.astype(jnp.float32)
+        new_w = w32.astype(jnp.float32) - lr * delta
+        return new_w.astype(p.dtype), new_w, m, v
+
+    out = jax.tree.map(upd, params, masters, grads, state.mu, state.nu)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    new_params, new_master, new_mu, new_nu = (pick(0), pick(1), pick(2),
+                                              pick(3))
+    if state.master is None:
+        new_master = None
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, AdamWState(step, new_mu, new_nu, new_master), metrics

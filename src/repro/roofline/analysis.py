@@ -1,0 +1,211 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+All quantities are PER-DEVICE (the compiled module is the post-GSPMD
+per-device program), so each term is directly a per-chip step-time lower
+bound in seconds:
+
+  compute    = device_flops / peak_flops          (197 TFLOP/s bf16, v5e)
+  memory     = device_bytes_accessed / hbm_bw     (819 GB/s)
+  collective = device_collective_bytes / link_bw  (~50 GB/s/link ICI)
+
+device_flops / bytes come from compiled.cost_analysis(); collective bytes are
+NOT in cost_analysis, so we parse the optimized HLO and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) measures how
+much of the compiled compute is "useful" (catches remat/redundancy waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+# TPU v5e hardware constants (from the brief)
+PEAK_FLOPS = 197e12         # bf16 FLOP/s per chip
+HBM_BW = 819e9              # bytes/s per chip
+LINK_BW = 50e9              # bytes/s per ICI link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind OPERAND bytes, summed over the module.
+
+    Optimized HLO prints only the result type, so operand bytes are derived
+    from it: all-gather concatenates group_size operands (operand = result /
+    g); reduce-scatter consumes the pre-scatter operand (result * g);
+    all-reduce / all-to-all / collective-permute are size-preserving.
+    Tuple-shaped collectives contribute every element.
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    op_re = re.compile(
+        r"\b(" + "|".join(_COLLECTIVES) + r")(-start|-done)?[.\d]*\(")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        _, rhs = stripped.split(" = ", 1)
+        rhs = rhs.split("metadata=", 1)[0]  # op names recur in metadata
+        m = op_re.search(rhs)
+        if m is None:
+            continue
+        op, suffix = m.group(1), m.group(2)
+        if suffix == "-done":
+            continue  # counted at the matching -start
+        # result type(s) = everything before the op token; tuple-typed
+        # combined collectives reduce every element, so sum them all
+        result_shapes = _SHAPE_RE.findall(rhs[:m.start()])
+        if suffix == "-start" and len(result_shapes) >= 2:
+            result_shapes = result_shapes[1:]  # (operand, results...)
+        result = sum(_shape_bytes(d, s) for d, s in result_shapes)
+        g = _group_size(stripped)
+        if op == "all-gather":
+            result = result // max(g, 1)
+        elif op == "reduce-scatter":
+            result = result * g
+        out[op] += result
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    device_flops: float
+    device_bytes: float
+    device_collective_bytes: float
+    collective_breakdown: dict
+    model_flops_global: float
+    memory_per_device: Optional[float] = None  # bytes, from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.device_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.device_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.device_collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.device_flops * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at the
+        bound max(terms): useful_model_flops_time / achievable_step_time."""
+        t_model = (self.model_flops_global / self.chips) / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_model / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D with N = active params (MoE) and D = tokens processed.
+
+    decode shapes process global_batch tokens per step (one new token each).
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens  # forward only
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token per seq
+
+
+def analyze(arch: str, shape, cfg, mesh_name: str, chips: int,
+            compiled, hlo_text: str) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = float(getattr(ma, "temp_size_in_bytes", 0) +
+                        getattr(ma, "argument_size_in_bytes", 0) +
+                        getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        device_flops=flops, device_bytes=bytes_accessed,
+        device_collective_bytes=float(sum(coll.values())),
+        collective_breakdown=coll,
+        model_flops_global=model_flops(cfg, shape),
+        memory_per_device=mem,
+    )
+
+
+def save(r: Roofline, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(r.to_dict(), f, indent=1)
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<24}{'shape':<13}{'mesh':<7}{'t_comp(s)':>10}"
+           f"{'t_mem(s)':>10}{'t_coll(s)':>10}{'bound':>11}"
+           f"{'useful':>8}{'roofl%':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:<24}{r['shape']:<13}{r['mesh']:<7}"
+            f"{r['t_compute']:>10.3e}{r['t_memory']:>10.3e}"
+            f"{r['t_collective']:>10.3e}{r['bottleneck']:>11}"
+            f"{r['useful_flops_ratio']:>8.2f}"
+            f"{100*r['roofline_fraction']:>7.1f}%")
+    return "\n".join(lines)

@@ -1,0 +1,82 @@
+"""Per-op-kind HLO cost breakdown — the dry-run 'profiler'.
+
+With no TPU wall-clock, the optimization loop reasons from the compiled
+HLO: this module attributes cost_analysis-style bytes to op kinds (dot,
+fusion kinds, convert, copy, collectives, ...) by walking the optimized HLO
+text and sizing each instruction's result + operands where printed.  It is
+an approximation of cost_analysis' per-op view (XLA's python API exposes
+only module totals), good enough to rank "what dominates bytes accessed".
+"""
+
+from __future__ import annotations
+
+import collections
+import re
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_OP_RE = re.compile(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\][^\s]*)\s+"
+                    r"([a-z][a-z0-9\-]*)[.\d]*\(")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for x in dims.split(","):
+            n *= int(x)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def result_bytes_by_op(hlo_text: str, top: int = 15) -> list[tuple[str, int, int]]:
+    """[(op_kind, total_result_bytes, count)] sorted by bytes desc.
+
+    Uses each instruction's RESULT size (operands are other instructions'
+    results, so summing results once approximates unique-buffer traffic;
+    actual reads are >= this).  While-loop bodies are counted once — pair
+    with the unrolled depth-variants for absolute numbers; ratios within one
+    module are directly comparable.
+    """
+    sizes: dict[str, int] = collections.defaultdict(int)
+    counts: dict[str, int] = collections.defaultdict(int)
+    in_fusion_body = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # fusion sub-computations are printed as separate blocks; their inner
+        # ops are NOT HBM traffic (cost_analysis is fusion-aware) — skip them
+        if stripped.endswith("{") and "(" in stripped:
+            in_fusion_body = ("fused" in stripped.split("(")[0]
+                              or "wrapped" in stripped.split("(")[0])
+            continue
+        if stripped == "}":
+            in_fusion_body = False
+            continue
+        if in_fusion_body or " = " not in stripped:
+            continue
+        _, rhs = stripped.split(" = ", 1)
+        m = _OP_RE.search(" = " + rhs)
+        if m is None:
+            continue
+        op = m.group(1)
+        head = rhs[:rhs.find(m.group(0)) if m.group(0) in rhs else None]
+        shapes = _SHAPE_RE.findall(rhs[:m.start(1)])
+        b = sum(_bytes_of(d, s) for d, s in shapes)
+        # annotate fusions with their metadata op_name hint when available
+        if op == "fusion":
+            mm = re.search(r'op_name="[^"]*?([a-zA-Z0-9_\-]+)"', stripped)
+            if mm:
+                op = f"fusion:{mm.group(1).split('/')[-1]}"
+        sizes[op] += b
+        counts[op] += 1
+    rows = sorted(((k, v, counts[k]) for k, v in sizes.items()),
+                  key=lambda t: -t[1])
+    return rows[:top]
+
+
+def fmt(rows: list[tuple[str, int, int]]) -> str:
+    out = [f"{'op':<40}{'result GB':>12}{'count':>8}"]
+    for op, b, c in rows:
+        out.append(f"{op:<40}{b/1e9:>12.3f}{c:>8}")
+    return "\n".join(out)

@@ -1,0 +1,149 @@
+"""train_step factory + Trainer with production fault-tolerance behaviour.
+
+make_train_step builds the jit-able pure function
+
+    (params, opt_state, batch, rng) -> (params, opt_state, metrics)
+
+with optional microbatch gradient accumulation (lax.scan over microbatches —
+constant memory in accumulation steps) and optional error-feedback gradient
+compression applied to the cross-pod all-reduce (see distributed/compression).
+
+Trainer adds the operational layer the brief requires at 1000+ nodes:
+
+  * checkpoint/restart — periodic async sharded checkpoints; on construction
+    the Trainer resumes from the newest valid checkpoint (kill -9 mid-run and
+    re-launch is the supported recovery path, exercised in tests);
+  * deterministic data resume — the TokenStream is stateless (batch_at(step)),
+    so a restarted run consumes exactly the batches it would have seen;
+  * straggler detection — per-step wall-time EWMA + z-score; steps slower
+    than ``straggler_z`` sigmas are counted and surfaced in metrics (on a real
+    fleet this feeds the reschedule signal; here it drives logging + tests);
+  * elastic restart — checkpoints are mesh-agnostic (full arrays), so a
+    restore onto a different device count / rules just re-shards (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, hp: adamw.Hparams,
+                    num_microbatches: int = 1,
+                    compress_fn: Optional[Callable] = None):
+    """Pure train step; microbatches split the batch's leading axis."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True)(params, batch, cfg)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, _rng=None):
+        if num_microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                mb = b // num_microbatches
+                return x.reshape((num_microbatches, mb) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss_a, grads_a, metrics_a = acc
+                loss, metrics, grads = grads_of(params, mb)
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_a, grads)
+                return (loss_a + loss, grads,
+                        jax.tree.map(jnp.add, metrics_a, metrics)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"nll": jnp.zeros((), jnp.float32),
+                      "aux": jnp.zeros((), jnp.float32)}
+            (loss, grads, metrics), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_g, zero_m), micro)
+            inv = 1.0 / num_microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+        params, opt_state, opt_metrics = adamw.update(grads, opt_state,
+                                                      params, hp)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 50
+    async_checkpoint: bool = True
+    straggler_z: float = 3.0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, hp: adamw.Hparams, data,
+                 tcfg: TrainerConfig, rng: jax.Array,
+                 num_microbatches: int = 1):
+        from repro.checkpoint import manager as ckpt
+        self.cfg, self.hp, self.data, self.tcfg = cfg, hp, data, tcfg
+        self.ckpt = ckpt.Manager(tcfg.checkpoint_dir,
+                                 async_write=tcfg.async_checkpoint)
+        self.step_fn = jax.jit(make_train_step(cfg, hp, num_microbatches),
+                               donate_argnums=(0, 1))
+        self.params = M.init(rng, cfg)
+        self.opt_state = adamw.init(self.params)
+        self.step = 0
+        self.straggler_events = 0
+        self._ewma = None
+        self._ewvar = 0.0
+        # fault tolerance: resume from the newest checkpoint if one exists
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            restored = self.ckpt.restore(latest,
+                                         (self.params, self.opt_state))
+            self.params, self.opt_state = restored
+            self.step = latest
+
+    def _track_stragglers(self, dt: float) -> bool:
+        if self._ewma is None:
+            self._ewma = dt
+            return False
+        z = (dt - self._ewma) / max(self._ewvar ** 0.5, 1e-6)
+        slow = z > self.tcfg.straggler_z and dt > 1.5 * self._ewma
+        self._ewma = 0.9 * self._ewma + 0.1 * dt
+        self._ewvar = 0.9 * self._ewvar + 0.1 * (dt - self._ewma) ** 2
+        if slow:
+            self.straggler_events += 1
+        return slow
+
+    def run(self, num_steps: int, on_step=None) -> dict:
+        metrics = {}
+        for _ in range(num_steps):
+            batch = self.data.batch_at(self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            self._track_stragglers(time.perf_counter() - t0)
+            self.step += 1
+            if self.step % self.tcfg.checkpoint_every == 0:
+                self.ckpt.save(self.step, (self.params, self.opt_state))
+            if on_step is not None:
+                on_step(self.step, metrics)
+        self.ckpt.wait()
+        return {k: float(v) for k, v in metrics.items()} | {
+            "straggler_events": self.straggler_events}

@@ -1,0 +1,66 @@
+"""Spectral-density conventions and kernel-matrix sanity (pins Theorem 1 setup)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernels as K
+
+KERNELS = [
+    K.Matern(nu=0.5, lengthscale=1.0),
+    K.Matern(nu=1.5, lengthscale=1.0),
+    K.Matern(nu=2.5, lengthscale=0.7),
+    K.Gaussian(sigma=0.8),
+]
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: repr(k))
+def test_spectral_density_integrates_to_k0_1d(kern):
+    # K(0) = int m(s) ds = 1 for all our unit-variance kernels (d = 1).
+    s = jnp.linspace(-400.0, 400.0, 800_001)
+    m = kern.spectral_density(jnp.abs(s), d=1)
+    total = jnp.trapezoid(m, s)
+    np.testing.assert_allclose(float(total), 1.0, rtol=2e-3)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: repr(k))
+def test_inverse_fourier_matches_kernel_1d(kern):
+    # K(u) = int m(s) cos(2 pi u s) ds  (paper's ordinary-frequency convention).
+    s = jnp.linspace(0.0, 400.0, 400_001)
+    for u in (0.3, 1.0, 2.2):
+        m = kern.spectral_density(s, d=1)
+        val = 2.0 * jnp.trapezoid(m * jnp.cos(2.0 * jnp.pi * u * s), s)
+        expected = float(kern.from_distance(jnp.asarray(u)))
+        np.testing.assert_allclose(float(val), expected, rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: repr(k))
+def test_kernel_matrix_psd_and_unit_diagonal(kern):
+    x = jax.random.normal(jax.random.PRNGKey(0), (60, 3))
+    km = K.kernel_matrix(kern, x)
+    np.testing.assert_allclose(np.asarray(jnp.diag(km)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(km), np.asarray(km.T), atol=1e-6)
+    evals = np.linalg.eigvalsh(np.asarray(km, dtype=np.float64))
+    assert evals.min() > -1e-4
+
+
+def test_cross_kernel_matrix_matches_pointwise():
+    kern = K.Matern(nu=1.5)
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 2))
+    y = jax.random.normal(jax.random.PRNGKey(2), (5, 2))
+    km = K.kernel_matrix(kern, x, y)
+    for i in range(7):
+        for j in range(5):
+            r = float(jnp.linalg.norm(x[i] - y[j]))
+            np.testing.assert_allclose(
+                float(km[i, j]), float(kern.from_distance(jnp.asarray(r))), rtol=2e-4, atol=1e-5
+            )
+
+
+def test_laplacian_is_matern_half():
+    lap = K.Laplacian(lengthscale=2.0)
+    r = jnp.asarray([0.0, 0.5, 1.0, 3.0])
+    np.testing.assert_allclose(
+        np.asarray(lap.from_distance(r)), np.exp(-np.asarray(r) / 2.0), rtol=1e-6
+    )

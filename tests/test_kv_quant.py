@@ -1,0 +1,63 @@
+"""int8 KV-cache quantization: round-trip accuracy + attention-output error
+vs the bf16 cache path + hypothesis property (scale covers absmax)."""
+
+from __future__ import annotations
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.serving import kv_quant
+
+
+def test_roundtrip_error_small():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 64, 32))
+    qkv = kv_quant.quantize(x)
+    back = kv_quant.dequantize(qkv)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    # absmax int8 + bf16 scale: error <= absmax * (1/254 + 2^-8) per row
+    absmax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    assert (err <= absmax * (1 / 254 + 1 / 256) * 1.05 + 1e-6).all()
+
+
+def test_attention_output_error_vs_fp_cache():
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, h, s, dh = 1, 4, 128, 32
+    q = jax.random.normal(keys[0], (b, h, s, dh))
+    k = jax.random.normal(keys[1], (b, h, s, dh))
+    v = jax.random.normal(keys[2], (b, h, s, dh))
+    exact = fa_ref.attention(q, k, v, causal=True)
+    kq = kv_quant.dequantize(kv_quant.quantize(k))
+    vq = kv_quant.dequantize(kv_quant.quantize(v))
+    approx = fa_ref.attention(q, kq, vq, causal=True)
+    rel = float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.01, rel  # sub-1% relative output error
+
+
+def test_update_row_matches_requantize():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 16, 8))
+    qkv = kv_quant.quantize(x)
+    new = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 1, 8))
+    updated = kv_quant.update_row(qkv, new, 5)
+    ref = x.at[:, :, 5:6, :].set(new)
+    np.testing.assert_allclose(
+        np.asarray(kv_quant.dequantize(updated)),
+        np.asarray(kv_quant.dequantize(kv_quant.quantize(ref))),
+        rtol=0, atol=1e-6)
+
+
+@hypothesis.given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 100.0))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_scale_covers_absmax(seed, magnitude):
+    x = magnitude * jax.random.normal(jax.random.PRNGKey(seed % 1000), (4, 16))
+    qkv = kv_quant.quantize(x, scale_dtype=jnp.float32)
+    # every element representable: |x| <= 127 * scale (fp32 scales exact)
+    assert (np.abs(np.asarray(x)) <=
+            127.0 * np.asarray(qkv.scale)[..., None] * (1 + 1e-5) + 1e-7).all()
+    # bf16 scales stay within one bf16 ulp of covering
+    qb = kv_quant.quantize(x)
+    assert (np.abs(np.asarray(x)) <=
+            127.0 * np.asarray(qb.scale)[..., None] * (1 + 2 ** -7) + 1e-7).all()

@@ -1,0 +1,114 @@
+"""SA leverage vs the exact oracle — the paper's Theorem 5 / Figure 2 claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kde, kernels as K, krr, leverage
+from repro.data import krr_data
+
+KERN = K.Matern(nu=1.5)
+
+
+def _ratio_stats(approx_probs, exact_probs):
+    r = np.asarray(approx_probs) / np.asarray(exact_probs)
+    return r.mean(), np.quantile(r, 0.05), np.quantile(r, 0.95)
+
+
+def _sa_vs_exact(n, key, dataset_fn, lam_scale=0.45, lam_pow=-0.8, use_true_density=True):
+    data = dataset_fn(jax.random.PRNGKey(key), n)
+    lam = lam_scale * n ** lam_pow
+    exact = krr.exact_leverage(KERN, data.x, lam)
+    dens = data.density if use_true_density else kde.estimate_densities(data.x)
+    sa = leverage.sa_leverage(dens, lam, KERN, d=data.x.shape[1], n=n)
+    return sa, exact
+
+
+def test_sa_matches_exact_uniform_interior():
+    """Unif[0,1] is the paper's easiest case — tight interior agreement."""
+    n = 800
+    data = krr_data.uniform(jax.random.PRNGKey(0), n)
+    lam = 0.45 * n ** -0.8
+    exact = krr.exact_leverage(KERN, data.x, lam)
+    sa = leverage.sa_leverage(data.density, lam, KERN, d=1, n=n)
+    interior = (data.x[:, 0] > 0.1) & (data.x[:, 0] < 0.9)
+    ratio = np.asarray(sa.rescaled / exact.rescaled)[np.asarray(interior)]
+    # Rescaled leverage pointwise ratio near 1 on the interior.
+    assert 0.8 < ratio.mean() < 1.25, ratio.mean()
+    assert np.quantile(ratio, 0.05) > 0.6
+    assert np.quantile(ratio, 0.95) < 1.6
+
+
+def test_sa_relative_error_decreases_with_n():
+    """Theorem 5: relative error -> 0 as n grows (median over interior points)."""
+    errs = []
+    for n in (200, 800, 2400):
+        data = krr_data.uniform(jax.random.PRNGKey(1), n)
+        lam = 0.45 * n ** -0.8
+        exact = krr.exact_leverage(KERN, data.x, lam)
+        sa = leverage.sa_leverage(data.density, lam, KERN, d=1, n=n)
+        interior = np.asarray((data.x[:, 0] > 0.1) & (data.x[:, 0] < 0.9))
+        rel = np.abs(np.asarray(sa.rescaled / exact.rescaled) - 1.0)[interior]
+        errs.append(np.median(rel))
+    assert errs[2] < errs[0], errs
+
+
+def test_sa_captures_bimodal_nonuniformity():
+    """Minor-mode (low-density) points must get boosted sampling probability."""
+    n = 1500
+    data = krr_data.bimodal_1d_paper(jax.random.PRNGKey(2), n)
+    lam = 0.45 * n ** -0.8
+    exact = krr.exact_leverage(KERN, data.x, lam)
+    sa = leverage.sa_leverage(data.density, lam, KERN, d=1, n=n)
+    minor = np.asarray(data.x[:, 0] > 0.9)
+    assert minor.sum() > 5
+    # Both exact and SA should give minor-mode points a higher mean probability.
+    for probs in (np.asarray(exact.probs), np.asarray(sa.probs)):
+        assert probs[minor].mean() > 2.0 * probs[~minor].mean()
+    # And SA should broadly agree with exact on the minor/major ratio.
+    boost_exact = np.asarray(exact.probs)[minor].mean() / np.asarray(exact.probs)[~minor].mean()
+    boost_sa = np.asarray(sa.probs)[minor].mean() / np.asarray(sa.probs)[~minor].mean()
+    assert 0.3 < boost_sa / boost_exact < 3.0
+
+
+def test_sa_with_estimated_density_close_to_true_density():
+    """Lemma 14: o(1) KDE error perturbs the leverage only mildly."""
+    n = 1200
+    data = krr_data.bimodal_1d_paper(jax.random.PRNGKey(3), n)
+    lam = 0.45 * n ** -0.8
+    dens_hat = kde.estimate_densities(data.x, h=0.3 * n ** (-1.0 / 3.0))
+    sa_true = leverage.sa_leverage(data.density, lam, KERN, d=1, n=n)
+    sa_hat = leverage.sa_leverage(dens_hat, lam, KERN, d=1, n=n, floor=1e-3)
+    r = np.asarray(sa_hat.probs) / np.asarray(sa_true.probs)
+    assert 0.6 < np.median(r) < 1.6
+
+
+def test_rule_of_thumb_power_law():
+    """ell ~ p^{d/(2 alpha) - 1}: slope of log K_tilde vs log p matches."""
+    kern = K.Matern(nu=1.5)
+    d = 1
+    alpha = kern.alpha(d)  # = 2.0
+    p = jnp.exp(jnp.linspace(jnp.log(0.05), jnp.log(2.0), 32))
+    vals = leverage.matern_closed_form(p, 1e-3, kern, d)
+    slope = np.polyfit(np.log(np.asarray(p)), np.log(np.asarray(vals)), 1)[0]
+    np.testing.assert_allclose(slope, d / (2 * alpha) - 1.0, atol=1e-6)
+
+
+def test_d_stat_estimate_matches_exact_order():
+    n = 1000
+    data = krr_data.uniform(jax.random.PRNGKey(4), n)
+    lam = 0.45 * n ** -0.8
+    exact = krr.exact_leverage(KERN, data.x, lam)
+    sa = leverage.sa_leverage(data.density, lam, KERN, d=1, n=n)
+    # SA's implied statistical dimension within 2x of the exact trace.
+    est = float(sa.d_stat)        # = sum_i K_tilde_i / n  ~=  sum_i ell_i
+    true = float(exact.d_stat)    # = Tr(K (K + n lam)^{-1})
+    assert 0.5 < est / true < 2.0, (est, true)
+
+
+def test_density_floor_behaviour():
+    p = jnp.asarray([1e-6, 0.5, 2.0])
+    out = np.asarray(leverage.density_floor(p, 0.1))
+    assert out[0] == pytest.approx((0.05 + 1e-6) / 1.5)
+    assert out[1] == pytest.approx(0.5)

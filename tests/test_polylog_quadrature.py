@@ -1,0 +1,83 @@
+"""Numerical substrates of Eq. (6): polylog and radial quadrature."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernels as K
+from repro.core import leverage, polylog, quadrature
+
+
+def test_neg_polylog_s1_is_log1p():
+    x = jnp.asarray([1e-3, 0.1, 1.0, 10.0, 1e4, 1e8])
+    got = polylog.neg_polylog(1.0, x)
+    np.testing.assert_allclose(np.asarray(got), np.log1p(np.asarray(x)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("s", [0.5, 1.5, 2.5, 4.0])
+def test_neg_polylog_matches_series_small_x(s):
+    x = jnp.asarray([0.01, 0.1, 0.5, 0.8])
+    got = polylog.neg_polylog(s, x)
+    want = polylog.neg_polylog_series(s, x, terms=4000)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+def test_neg_polylog_monotone_and_zero_at_zero():
+    x = jnp.linspace(0.0, 50.0, 101)
+    f = np.asarray(polylog.neg_polylog(1.5, x))
+    assert f[0] == pytest.approx(0.0, abs=1e-7)
+    assert np.all(np.diff(f) > 0)
+
+
+@pytest.mark.parametrize(
+    "nu,d,bound",
+    # Closed-form error is O(lam^{1/alpha}), alpha = nu + d/2: the larger
+    # alpha, the slower the decay — bounds scale accordingly.
+    [(0.5, 1, 0.03), (1.5, 1, 0.06), (1.5, 2, 0.08), (2.5, 3, 0.2)],
+)
+def test_matern_quadrature_close_to_closed_form(nu, d, bound):
+    """App. D.2: dropping +a^2 gives O(lam^{1/alpha}) relative error."""
+    kern = K.Matern(nu=nu)
+    lam = 1e-4
+    p = jnp.asarray([0.05, 0.2, 1.0, 4.0])
+    exact = quadrature.radial_integral(p, lam, kern, d, order=512)
+    closed = leverage.matern_closed_form(p, lam, kern, d)
+    rel = np.abs(np.asarray(closed) / np.asarray(exact) - 1.0)
+    assert rel.max() < bound, rel
+
+
+def test_matern_closed_form_error_shrinks_with_lambda():
+    kern = K.Matern(nu=1.5)
+    p = jnp.asarray([0.5])
+    rels = []
+    for lam in (1e-2, 1e-3, 1e-4):
+        exact = quadrature.radial_integral(p, lam, kern, 1, order=512)
+        closed = leverage.matern_closed_form(p, lam, kern, 1)
+        rels.append(abs(float(closed[0] / exact[0]) - 1.0))
+    assert rels[0] > rels[1] > rels[2]
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_gaussian_quadrature_matches_polylog_closed_form(d):
+    kern = K.Gaussian(sigma=0.5)
+    lam = 1e-3
+    p = jnp.asarray([0.05, 0.3, 1.0, 5.0])
+    quad = quadrature.radial_integral(p, lam, kern, d, order=512)
+    closed = leverage.gaussian_closed_form(p, lam, kern, d)
+    np.testing.assert_allclose(np.asarray(quad), np.asarray(closed), rtol=2e-3)
+
+
+def test_radial_integral_decreasing_in_density():
+    kern = K.Matern(nu=1.5)
+    p = jnp.linspace(0.05, 5.0, 64)
+    vals = np.asarray(quadrature.radial_integral(p, 1e-3, kern, 2))
+    assert np.all(np.diff(vals) < 0)
+
+
+def test_grid_interpolation_matches_direct_quadrature():
+    kern = K.Matern(nu=1.5)
+    lam = 2e-4
+    p = jnp.exp(jnp.linspace(jnp.log(0.02), jnp.log(8.0), 500))
+    direct = leverage.sa_leverage(p, lam, kern, d=2, method="quadrature").rescaled
+    grid = leverage.sa_leverage(p, lam, kern, d=2, method="grid").rescaled
+    np.testing.assert_allclose(np.asarray(grid), np.asarray(direct), rtol=2e-3)

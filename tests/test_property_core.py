@@ -1,0 +1,82 @@
+"""Hypothesis property tests on the core system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kernels as K, leverage, nystrom, polylog, quadrature
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@st.composite
+def kernel_strategy(draw):
+    family = draw(st.sampled_from(["matern05", "matern15", "matern25", "gauss"]))
+    scale = draw(st.floats(0.3, 3.0))
+    if family == "gauss":
+        return K.Gaussian(sigma=scale)
+    nu = {"matern05": 0.5, "matern15": 1.5, "matern25": 2.5}[family]
+    return K.Matern(nu=nu, lengthscale=scale)
+
+
+@given(kern=kernel_strategy(), seed=st.integers(0, 2**31 - 1), d=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_kernel_matrix_always_psd(kern, seed, d):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (24, d))
+    km = np.asarray(K.kernel_matrix(kern, x), dtype=np.float64)
+    evals = np.linalg.eigvalsh(km)
+    assert evals.min() > -1e-4
+    np.testing.assert_allclose(np.diag(km), 1.0, atol=1e-5)
+
+
+@given(
+    kern=kernel_strategy(),
+    seed=st.integers(0, 2**31 - 1),
+    lam=st.floats(1e-6, 1e-1),
+    method=st.sampled_from(["closed_form", "quadrature", "grid"]),
+)
+@settings(**SETTINGS)
+def test_sa_leverage_is_valid_distribution(kern, seed, lam, method):
+    dens = jnp.exp(jax.random.normal(jax.random.PRNGKey(seed), (64,)))
+    sa = leverage.sa_leverage(dens, lam, kern, d=2, n=64, method=method)
+    probs = np.asarray(sa.probs)
+    assert np.all(probs >= 0)
+    np.testing.assert_allclose(probs.sum(), 1.0, rtol=1e-4)
+    assert np.all(np.asarray(sa.rescaled) <= 64.0 + 1e-3)
+
+
+@given(kern=kernel_strategy(), lam=st.floats(1e-6, 1e-2), d=st.integers(1, 3))
+@settings(**SETTINGS)
+def test_radial_integral_monotone_decreasing_in_density(kern, lam, d):
+    if isinstance(kern, K.Matern) and not 2 * kern.alpha(d) > d:
+        return
+    p = jnp.exp(jnp.linspace(-3.0, 2.0, 32))
+    vals = np.asarray(quadrature.radial_integral(p, lam, kern, d))
+    assert np.all(np.diff(vals) < 0)
+
+
+@given(s=st.floats(0.5, 4.0), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_polylog_monotone_nonnegative(s, seed):
+    x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(seed), (16,)) * 100.0)
+    f = np.asarray(polylog.neg_polylog(s, x))
+    assert np.all(f >= -1e-7)
+    assert np.all(np.diff(f) >= -1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_nystrom_invariant_to_landmark_duplication(seed):
+    """L = K S (S^T K S)^+ S^T K is invariant to duplicating S's columns."""
+    kern = K.Matern(nu=1.5)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (80, 2))
+    y = jnp.sin(3.0 * x[:, 0]) + 0.1 * jax.random.normal(key, (80,))
+    idx = jnp.arange(0, 80, 5)  # 16 landmarks
+    idx_dup = jnp.concatenate([idx, idx[:4]])  # duplicate 4 of them
+    f1 = nystrom.fitted(kern, nystrom.fit_from_landmarks(kern, x, y, 1e-3, idx), x)
+    f2 = nystrom.fitted(kern, nystrom.fit_from_landmarks(kern, x, y, 1e-3, idx_dup), x)
+    # Exact invariance holds at jitter = 0; the fp32-stabilizing relative
+    # jitter perturbs the two solves slightly differently, so allow O(1e-2).
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=5e-2)

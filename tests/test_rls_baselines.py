@@ -1,0 +1,58 @@
+"""Algebraic baselines (uniform / Recursive-RLS / BLESS) sanity + accuracy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kernels as K, krr, rls
+from repro.data import krr_data
+
+KERN = K.Matern(nu=0.5)
+
+
+def test_projection_estimator_exact_with_full_sketch():
+    n = 300
+    data = krr_data.uniform(jax.random.PRNGKey(0), n)
+    lam = 1e-3
+    exact = krr.exact_leverage(KERN, data.x, lam)
+    est = rls._projection_leverage(
+        KERN, data.x, data.x, jnp.ones(n), mu=n * lam, jitter=0.0
+    )
+    np.testing.assert_allclose(
+        np.asarray(est), np.asarray(exact.leverage), rtol=2e-3, atol=2e-4
+    )
+
+
+def _corr(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return np.corrcoef(a, b)[0, 1]
+
+
+def test_recursive_rls_correlates_with_exact():
+    n = 900
+    data = krr_data.bimodal_1d_paper(jax.random.PRNGKey(1), n)
+    lam = 0.45 * n ** -0.8
+    exact = krr.exact_leverage(KERN, data.x, lam)
+    est = rls.recursive_rls(KERN, data.x, lam, seed=0)
+    assert est.sketch_size > 0
+    assert _corr(est.leverage, exact.leverage) > 0.8
+    r = np.asarray(est.probs) / np.asarray(exact.probs)
+    assert 0.5 < np.median(r) < 2.0
+
+
+def test_bless_correlates_with_exact():
+    n = 900
+    data = krr_data.bimodal_1d_paper(jax.random.PRNGKey(2), n)
+    lam = 0.45 * n ** -0.8
+    exact = krr.exact_leverage(KERN, data.x, lam)
+    est = rls.bless(KERN, data.x, lam, seed=0)
+    assert est.sketch_size > 0
+    assert _corr(est.leverage, exact.leverage) > 0.8
+    r = np.asarray(est.probs) / np.asarray(exact.probs)
+    assert 0.5 < np.median(r) < 2.0
+
+
+def test_uniform_baseline():
+    u = rls.uniform(50)
+    np.testing.assert_allclose(np.asarray(u.probs), 1.0 / 50)
+    np.testing.assert_allclose(float(jnp.sum(u.probs)), 1.0, rtol=1e-6)

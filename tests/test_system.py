@@ -1,0 +1,55 @@
+"""End-to-end behaviour of the paper's system: Algorithm 1 -> Nystrom -> risk.
+
+This is the full production path a user runs:
+  densities (binned KDE)  ->  SA leverage (closed form)  ->  landmark sampling
+  ->  Nystrom KRR solve  ->  in-sample risk comparable to exact KRR.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kde, kernels as K, krr, leverage, nystrom
+from repro.data import krr_data
+
+
+def test_full_pipeline_bimodal_3d():
+    """The paper's Fig. 1 setting (3-D bimodal, Matern nu=1.5), scaled down."""
+    n = 2000
+    kern = K.Matern(nu=1.5)
+    data = krr_data.bimodal(jax.random.PRNGKey(0), n, d=3, gamma=0.4)
+    lam = 0.075 * n ** (-2.0 / 3.0)
+
+    # Algorithm 1: estimate densities, apply Eq. (6), normalize.
+    h = 0.15 * n ** (-1.0 / 7.0)
+    dens = kde.estimate_densities(data.x, h=h, method="binned", grid_size=64)
+    sa = leverage.sa_leverage(dens, lam, kern, d=3, n=n, floor=1e-3)
+    np.testing.assert_allclose(float(jnp.sum(sa.probs)), 1.0, rtol=1e-5)
+
+    # Nystrom with the paper's projection dimension 5 n^{1/3}.
+    m = int(5 * n ** (1.0 / 3.0))
+    ny = nystrom.fit(jax.random.PRNGKey(1), kern, data.x, data.y, lam, m, sa.probs)
+    risk_sa = float(krr.in_sample_risk(nystrom.fitted(kern, ny, data.x), data.f_star))
+
+    # Exact KRR reference.
+    exact = krr.fit(kern, data.x, data.y, lam)
+    risk_exact = float(krr.in_sample_risk(exact.fitted, data.f_star))
+
+    assert risk_exact < 0.05
+    assert risk_sa < 5.0 * risk_exact + 1e-3, (risk_sa, risk_exact)
+
+
+def test_pipeline_is_jit_compatible():
+    """Density -> SA -> probs composes under jit (one fused accelerator call)."""
+    kern = K.Matern(nu=1.5)
+
+    @jax.jit
+    def probs_of(x):
+        dens = kde.kde_direct(x, x, 0.1)
+        return leverage.sa_leverage(dens, 1e-3, kern, d=2, n=x.shape[0]).probs
+
+    x = jax.random.uniform(jax.random.PRNGKey(2), (256, 2))
+    p = probs_of(x)
+    assert p.shape == (256,)
+    assert bool(jnp.all(p > 0))
+    np.testing.assert_allclose(float(jnp.sum(p)), 1.0, rtol=1e-5)
