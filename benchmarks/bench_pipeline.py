@@ -1,0 +1,93 @@
+"""Time/memory trajectory of the streaming SA→Nyström pipeline.
+
+Sweeps n (and one tile sweep at the largest n), fits `SAKRRPipeline` at each
+point, and records per-stage seconds, throughput, peak RSS, and the streaming
+slab footprint to ``BENCH_pipeline.json`` — a list of records appended across
+runs, so successive commits build a trajectory.
+
+  PYTHONPATH=src python -m benchmarks.bench_pipeline [--n-max 262144]
+  PYTHONPATH=src python -m benchmarks.run --only pipeline --json BENCH_pipeline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import time
+
+import jax
+
+from repro.core import krr
+from repro.data import krr_data
+from repro.pipeline import PipelineConfig, SAKRRPipeline
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def append_records(path: str, records: list[dict]) -> None:
+    """Append records to a JSON trajectory file (list-of-dicts on disk)."""
+    existing: list[dict] = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    with open(path, "w") as f:
+        json.dump(existing + records, f, indent=1)
+
+
+def bench_one(n: int, tile: int, m: int | None, seed: int = 0) -> dict:
+    data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
+    cfg = PipelineConfig(nu=1.5, tile=tile, num_landmarks=m)
+    t0 = time.perf_counter()
+    pipe = SAKRRPipeline(cfg).fit(data.x, data.y)
+    fit_s = time.perf_counter() - t0
+    n_eval = min(n, 50_000)
+    t0 = time.perf_counter()
+    pred = jax.block_until_ready(pipe.predict(data.x[:n_eval]))
+    predict_s = time.perf_counter() - t0
+    m_used = pipe.state.num_landmarks
+    rec = {
+        "section": "pipeline",
+        "n": n,
+        "m": m_used,
+        "tile": tile,
+        "fit_seconds": round(fit_s, 4),
+        "stage_seconds": {k: round(v, 4) for k, v in pipe.seconds.items()},
+        "predict_seconds": round(predict_s, 4),
+        "predict_n": n_eval,
+        "rows_per_second": round(n / max(fit_s, 1e-9)),
+        "risk": float(krr.in_sample_risk(pred, data.f_star[:n_eval])),
+        "d_stat": float(pipe.d_stat),
+        # memory story: the streaming slab is the largest transient buffer
+        "slab_mb": round(tile * m_used * 4 / 2**20, 2),
+        "peak_rss_mb": round(_peak_rss_mb(), 1),
+    }
+    print(",".join(f"{k}={v}" for k, v in rec.items() if k != "stage_seconds"))
+    return rec
+
+
+def main(json_out: str | None = "BENCH_pipeline.json",
+         n_max: int = 262_144) -> None:
+    print("\n## pipeline (streaming SA->Nystrom)")
+    records = []
+    n = 16_384
+    while n <= n_max:
+        records.append(bench_one(n, tile=16_384, m=None))
+        n *= 4
+    # tile sweep at the top size: time/memory trade of the streaming slab
+    for tile in (4_096, 65_536):
+        records.append(bench_one(n_max, tile=tile, m=None))
+    if json_out:
+        append_records(json_out, records)
+        print(f"[appended {len(records)} records to {json_out}]")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-max", type=int, default=262_144)
+    ap.add_argument("--json", default="BENCH_pipeline.json")
+    args = ap.parse_args()
+    main(json_out=args.json, n_max=args.n_max)

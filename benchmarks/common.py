@@ -61,7 +61,13 @@ def leverage_probs(method: str, key, kernel, data, lam: float, d: int):
     raise ValueError(method)
 
 
-def nystrom_error(key, kernel, data, lam: float, probs, m: int) -> float:
-    fit = nystrom.fit(key, kernel, data.x, data.y, lam, m, probs)
-    pred = nystrom.fitted(kernel, fit, data.x)
+def nystrom_error(key, kernel, data, lam: float, probs, m: int,
+                  tile: int = 8192) -> float:
+    """Risk of an importance-sampled Nystrom fit via the streaming solver
+    (O(tile * m) memory — same code path as repro.pipeline)."""
+    from repro.core import sampling
+
+    idx = sampling.sample_with_replacement(key, probs, m)
+    fit = nystrom.fit_streaming(kernel, data.x, data.y, lam, idx, tile=tile)
+    pred = nystrom.predict_streaming(kernel, fit, data.x, tile=tile)
     return float(krr.in_sample_risk(pred, data.f_star))

@@ -1,65 +1,58 @@
 """End-to-end driver (the paper's kind): large-scale Nyström KRR with SA
-leverage scores — the full pipeline the paper makes fast.
+leverage scores through the streaming `repro.pipeline` stack.
 
-Density estimation (binned linear-time KDE) -> analytic leverage (Eq. 6
-closed form) -> importance-sampled landmarks -> Nyström solve -> risk,
-at n = 200,000 on CPU (paper: 5e5 on a Xeon core).  All methods' leverage
-times are reported; RC/BLESS are run at reduced n to keep the demo quick.
+KDE → analytic SA leverage (Eq. 6) → importance-sampled landmarks →
+streaming Nyström solve (G = K_nm^T K_nm accumulated over row tiles; the
+(n, m) cross-kernel matrix is never materialized) → batched predict.
+Default n = 1,000,000 with m = 1024 landmarks fits on a laptop CPU in
+O(tile · m) memory; the paper's 5e5-on-a-Xeon headline is the warm-up.
+RC/BLESS leverage baselines are run at reduced n for the timing comparison.
 
-  PYTHONPATH=src python examples/krr_largescale.py [--n 200000]
+  PYTHONPATH=src python examples/krr_largescale.py [--n 1000000] [--m 1024]
 """
 
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import kde, kernels, krr, leverage, nystrom, rls
+from repro.core import krr, rls
 from repro.data import krr_data
+from repro.pipeline import PipelineConfig, SAKRRPipeline
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--n", type=int, default=1_000_000)
+    ap.add_argument("--m", type=int, default=1024, help="Nystrom landmarks")
+    ap.add_argument("--tile", type=int, default=16384,
+                    help="rows per streaming slab")
     ap.add_argument("--compare-n", type=int, default=20_000,
                     help="n for the RC/BLESS timing comparison")
     args = ap.parse_args()
 
-    kern = kernels.Matern(nu=1.5)
     key = jax.random.PRNGKey(7)
 
-    # -- headline run: SA at full n ------------------------------------------
+    # -- headline run: the full pipeline at n ------------------------------
     n = args.n
-    lam = 0.075 * n ** (-2 / 3)
-    m = int(5 * n ** (1 / 3))
     data = krr_data.bimodal(jax.random.fold_in(key, 0), n, d=3)
+    cfg = PipelineConfig(nu=1.5, num_landmarks=args.m, tile=args.tile)
+    pipe = SAKRRPipeline(cfg).fit(data.x, data.y)
+    n_eval = min(n, 100_000)
+    pred = pipe.predict(data.x[:n_eval])
+    err = float(krr.in_sample_risk(pred, data.f_star[:n_eval]))
+    stage = "  ".join(f"{k}={v:.2f}s" for k, v in pipe.seconds.items())
+    print(f"n={n:,} m={pipe.state.num_landmarks}  {stage}")
+    print(f"  d_stat≈{pipe.d_stat:.1f}   error={err:.5f}")
 
-    t0 = time.perf_counter()
-    dens = kde.estimate_densities(data.x)
-    sa = leverage.sa_leverage(dens, lam, kern, d=3)
-    jax.block_until_ready(sa.probs)
-    t_sa = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    fit = nystrom.fit(jax.random.fold_in(key, 1), kern, data.x, data.y,
-                      lam, m, sa.probs)
-    pred = nystrom.fitted(kern, fit, data.x)
-    jax.block_until_ready(pred)
-    t_fit = time.perf_counter() - t0
-    err = float(krr.in_sample_risk(pred, data.f_star))
-    print(f"n={n:,}  SA leverage: {t_sa:.2f}s   nystrom(m={m}): {t_fit:.2f}s"
-          f"   error={err:.5f}")
-
-    # -- method comparison at reduced n --------------------------------------
+    # -- leverage-method comparison at reduced n ---------------------------
     nc = args.compare_n
     lam_c = 0.075 * nc ** (-2 / 3)
     data_c = krr_data.bimodal(jax.random.fold_in(key, 2), nc, d=3)
-    t0 = time.perf_counter()
-    dens_c = kde.estimate_densities(data_c.x)
-    sa_c = leverage.sa_leverage(dens_c, lam_c, kern, d=3)
-    jax.block_until_ready(sa_c.probs)
-    print(f"n={nc:,}  SA:    {time.perf_counter()-t0:6.2f}s")
+    pipe_c = SAKRRPipeline(PipelineConfig(nu=1.5)).fit(data_c.x, data_c.y)
+    t_sa = pipe_c.seconds["kde"] + pipe_c.seconds["leverage"]
+    print(f"n={nc:,}  SA:    {t_sa:6.2f}s")
+    kern = pipe_c.kernel
     t0 = time.perf_counter()
     rls.recursive_rls(kern, data_c.x, lam_c)
     print(f"n={nc:,}  RC:    {time.perf_counter()-t0:6.2f}s")

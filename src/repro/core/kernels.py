@@ -35,6 +35,38 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+# Rows parked at this coordinate are ~1e6 away from any real (O(1)-scale)
+# point, so every kernel map here underflows to exactly 0.0 there — padding
+# rows to a tile multiple needs no masking downstream.  Shared by the
+# streaming Nystrom solve (core.nystrom) and the Pallas gram kernel
+# (repro.kernels.gram); `sentinel_is_safe` checks the underflow actually
+# holds for a given kernel's bandwidth.
+ROW_SENTINEL = 1.0e6
+
+
+def round_up(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+def pad_rows_sentinel(x: Array, rows: int) -> Array:
+    """Pad (n, d) to (rows, d); new rows sit at the ROW_SENTINEL coordinate."""
+    n = x.shape[0]
+    if rows == n:
+        return x
+    out = jnp.pad(x, ((0, rows - n), (0, 0)))
+    return out.at[n:, 0].set(ROW_SENTINEL)
+
+
+def sentinel_is_safe(kernel: "Kernel") -> bool:
+    """True when k(ROW_SENTINEL / 2) underflows to exactly 0.
+
+    The /2 margin covers data with coordinates up to ~ROW_SENTINEL/2.  False
+    means the kernel's bandwidth is so wide (e.g. Gaussian sigma ~ 1e5 on
+    unnormalized data) that sentinel-padded rows would contribute nonzero
+    kernel values — callers must reject rather than silently corrupt sums.
+    """
+    return float(kernel.from_distance(jnp.asarray(ROW_SENTINEL * 0.5))) == 0.0
+
 
 def _sq_dists(x: Array, y: Array) -> Array:
     """Pairwise squared Euclidean distances, (n, d) x (m, d) -> (n, m).

@@ -39,6 +39,13 @@ from repro.core import polylog, quadrature
 
 Array = jax.Array
 
+# Tiny positive floor for density estimates.  `kde_binned` clips its FFT
+# output at zero, so p_i = 0.0 is a reachable input; the closed forms divide
+# by p (Gaussian) or raise it to a negative power (Matern) and the grid path
+# takes log(min(p)) — all NaN/inf at zero.  Every evaluation path clamps to
+# DENSITY_EPS, the hard backstop below the soft `density_floor` rescaling.
+DENSITY_EPS = 1e-30
+
 
 class SALeverage(NamedTuple):
     rescaled: Array   # (n,) K_tilde(x_i, x_i) ~= G_lam(x_i, x_i)
@@ -66,7 +73,8 @@ def matern_closed_form(p: Array, lam: float, kernel: K.Matern, d: int) -> Array:
         / math.sin(math.pi * d / (2.0 * alpha))
         * b ** (-d / (2.0 * alpha))
     )
-    return const * jnp.asarray(p) ** (d / (2.0 * alpha) - 1.0)
+    p = jnp.maximum(jnp.asarray(p), DENSITY_EPS)  # d < 2 alpha: exponent < 0
+    return const * p ** (d / (2.0 * alpha) - 1.0)
 
 
 def gaussian_closed_form(p: Array, lam: float, kernel: K.Gaussian, d: int) -> Array:
@@ -75,7 +83,7 @@ def gaussian_closed_form(p: Array, lam: float, kernel: K.Gaussian, d: int) -> Ar
     I(p) = Vol(S^{d-1}) Gamma(d/2) / (2 c^{d/2}) * F_{d/2}(p/lam') / p,
     c = 2 pi^2 sigma^2, lam' = lam (2 pi sigma^2)^{-d/2}, F_s = -Li_s(-x).
     """
-    p = jnp.asarray(p)
+    p = jnp.maximum(jnp.asarray(p), DENSITY_EPS)  # guard the 1/p below
     sigma = kernel.sigma
     c = 2.0 * math.pi ** 2 * sigma ** 2
     lam_p = lam * (2.0 * math.pi * sigma ** 2) ** (-d / 2.0)
@@ -85,7 +93,7 @@ def gaussian_closed_form(p: Array, lam: float, kernel: K.Gaussian, d: int) -> Ar
 
 def _grid_interp(p: Array, lam: float, kernel, d: int, grid_size: int, order: int) -> Array:
     """Log-log interpolation of the radial integral over a density grid."""
-    p = jnp.asarray(p)
+    p = jnp.maximum(jnp.asarray(p), DENSITY_EPS)  # log(min(p)) below
     lo = jnp.min(p) * 0.999
     hi = jnp.max(p) * 1.001
     # Guard the degenerate all-equal case.
@@ -134,6 +142,7 @@ def sa_leverage(
     n = int(p.shape[0]) if n is None else n
     if floor is not None:
         p = density_floor(p, floor)
+    p = jnp.maximum(p, DENSITY_EPS)
 
     if method == "closed_form":
         if isinstance(kernel, K.Matern):

@@ -1,4 +1,4 @@
-"""Nystrom-approximated KRR (paper §2.3).
+"""Nystrom-approximated KRR (paper §2.3), dense and streaming.
 
 With landmark columns S, the Nystrom approximation L = K S (S^T K S)^+ S^T K
 substituted into the KRR solution gives (Woodbury; derivation in DESIGN
@@ -10,7 +10,20 @@ history) the subset-of-regressors form
 which needs O(n m) kernel evaluations and an O(m^3) solve — the  O(n d_stat^2)
 downstream cost that leverage estimation must not exceed.  L is invariant to
 positive rescaling of S's columns, so with-replacement sampling needs no
-1/sqrt(m q_i) reweighting here (duplicates are absorbed by the jitter).
+1/sqrt(m q_i) reweighting here (duplicate columns land in the truncated
+eigenspace of K_mm — see ``solve_normal_eq``).
+
+Two solve paths:
+
+  * ``fit_from_landmarks`` / ``fit`` — dense: materializes K_nm.  Simple and
+    fine up to n ~ 1e5; it is also the parity oracle for the streaming path.
+  * ``fit_streaming`` — accumulates G = K_nm^T K_nm and rhs = K_nm^T y over
+    row tiles (lax.scan on the XLA backend, the fused Pallas ``gram`` kernel
+    on TPU — see `repro.kernels.dispatch`), so peak memory is O(tile * m)
+    regardless of n.  Under an active mesh (`repro.distributed.sharding`)
+    the row stream is sharded over the "rows" logical axis (mesh axis
+    "data" by default) and G/rhs are psum-reduced — a transparent no-op on
+    a single device.
 """
 
 from __future__ import annotations
@@ -20,10 +33,29 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels import Kernel, kernel_matrix
+from repro.core.kernels import (Kernel, kernel_matrix, pad_rows_sentinel,
+                                round_up, sentinel_is_safe)
 from repro.core.sampling import sample_with_replacement
 
 Array = jax.Array
+
+
+def _require_sentinel_safe(kernel: Kernel) -> None:
+    """Reject kernels whose bandwidth defeats sentinel-row padding.
+
+    Checked eagerly (kernel parameters are static); under a jit trace the
+    concrete check is impossible, so it is skipped — the public entry points
+    below are eager, which is where it matters.
+    """
+    try:
+        ok = sentinel_is_safe(kernel)
+    except jax.errors.TracerArrayConversionError:
+        return
+    if not ok:
+        raise ValueError(
+            f"{kernel!r} does not vanish at the padding sentinel distance "
+            "(~1e6); the streaming tile padding would corrupt the Gram. "
+            "Normalize the inputs or shrink the kernel bandwidth.")
 
 
 class NystromFit(NamedTuple):
@@ -31,6 +63,45 @@ class NystromFit(NamedTuple):
     landmarks: Array     # (m, d) landmark inputs
     landmark_idx: Array  # (m,) indices into the training set
     lam: float
+
+
+def solve_normal_eq(g: Array, rhs: Array, k_mm: Array, n: int, lam: float,
+                    jitter: float = 1e-6) -> Array:
+    """beta = (G + n lam K_mm)^{-1} rhs via spectrally-truncated whitening.
+
+    The plain normal equations are numerically hopeless at scale: K_mm's
+    eigenvalues decay to ~0 (smooth kernels, duplicated with-replacement
+    landmarks), and accumulation noise in G — eps * lambda_max(G), which
+    GROWS with n — is amplified by 1/eig through those directions until it
+    swamps the n*lam regularizer.  Instead eigendecompose K_mm = U E U^T,
+    whiten with W = U E^{-1/2} on the eigenspaces above a cutoff tau, and
+    solve the well-conditioned (W^T G W + n lam I) gamma = W^T rhs,
+    beta = W gamma.  tau is the larger of
+
+      * jitter * lambda_max(K_mm)          — the usual relative floor, and
+      * eps(dtype) * lambda_max(G)/(n lam) — the dtype's noise floor: below
+        it the whitened G carries no signal, only amplified rounding error,
+
+    so in fp32 at n = 1e6 the solve sheds exactly the directions fp32 cannot
+    represent (matching the f64 solve's risk to ~1e-4), while in f64 the
+    cutoff recedes and the solve is the textbook one.  Truncated directions
+    are zeroed via masks, keeping every shape static (jit-safe).
+    """
+    m = k_mm.shape[0]
+    evals, evecs = jnp.linalg.eigh(k_mm)
+    # trace >= lambda_max for PSD G, and is tight here (G's spectrum is
+    # dominated by the near-constant kernel component) — O(m) vs an O(m^3)
+    # eigendecomposition for a quantity that only needs an upper bound.
+    g_max = jnp.trace(g)
+    eps = jnp.finfo(g.dtype).eps
+    tau = jnp.maximum(jitter * evals[-1], eps * g_max / (n * lam))
+    inv_sqrt = jnp.where(evals > tau, 1.0 / jnp.sqrt(jnp.maximum(evals, tau)),
+                         0.0)
+    w = evecs * inv_sqrt[None, :]                         # (m, m) whitener
+    a = w.T @ g @ w
+    b = w.T @ rhs
+    gamma = jnp.linalg.solve(a + n * lam * jnp.eye(m, dtype=a.dtype), b)
+    return w @ gamma
 
 
 def fit_from_landmarks(
@@ -45,14 +116,9 @@ def fit_from_landmarks(
     xm = x[landmark_idx]
     k_nm = kernel_matrix(kernel, x, xm)                   # (n, m)
     k_mm = kernel_matrix(kernel, xm)                      # (m, m)
-    m = xm.shape[0]
-    lhs = k_nm.T @ k_nm + n * lam * k_mm
-    # Relative jitter: with-replacement sampling duplicates landmark columns,
-    # which makes lhs exactly singular — regularize at the matrix's own scale
-    # so it also survives fp32.
-    scale = jnp.trace(lhs) / m
-    lhs = lhs + (jitter * scale) * jnp.eye(m, dtype=k_nm.dtype)
-    beta = jnp.linalg.solve(lhs, k_nm.T @ y)
+    g = jax.lax.dot_general(k_nm, k_nm, (((0,), (0,)), ((), ())),
+                            preferred_element_type=k_nm.dtype)
+    beta = solve_normal_eq(g, k_nm.T @ y, k_mm, n, lam, jitter=jitter)
     return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx, lam=lam)
 
 
@@ -78,3 +144,126 @@ def predict(kernel: Kernel, fit_: NystromFit, x_new: Array) -> Array:
 def fitted(kernel: Kernel, fit_: NystromFit, x_train: Array) -> Array:
     """In-sample predictions f_L(x_i) (for the paper's R_n risk metric)."""
     return predict(kernel, fit_, x_train)
+
+
+# ---------------------------------------------------------------- streaming --
+
+def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
+                   *, tile: int = 8192) -> tuple[Array, Array]:
+    """(K_nm^T K_nm, K_nm^T w) accumulated over `tile`-row slabs (lax.scan).
+
+    The (tile, m) kernel slab is rebuilt in registers each step and dies
+    there; peak memory is O(tile * m + m^2), independent of n.  This is the
+    XLA backend of `repro.kernels.dispatch.gram_accumulate`; the Pallas
+    `gram` kernel computes the same quantity tile-fused on TPU.
+    """
+    n, d = x.shape
+    m = xm.shape[0]
+    acc = jnp.promote_types(x.dtype, jnp.float32)  # f64 under enable_x64
+    tile = min(tile, n)
+    np_ = round_up(n, tile)
+    xt = pad_rows_sentinel(x, np_).reshape(np_ // tile, tile, d)
+    wt = jnp.pad(w.astype(acc), (0, np_ - n)).reshape(np_ // tile, tile)
+
+    def step(carry, xw):
+        g, r = carry
+        xi, wi = xw
+        k = kernel_matrix(kernel, xi, xm).astype(acc)  # (tile, m)
+        g = g + jax.lax.dot_general(k, k, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=acc)
+        r = r + jax.lax.dot_general(k, wi, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=acc)
+        return (g, r), None
+
+    init = (jnp.zeros((m, m), acc), jnp.zeros((m,), acc))
+    (g, r), _ = jax.lax.scan(step, init, (xt, wt))
+    return g, r
+
+
+def streaming_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array,
+                        *, tile: int = 8192, backend: str | None = None,
+                        interpret: bool | None = None) -> tuple[Array, Array]:
+    """Mesh-aware (G, rhs): shards rows over the "rows" logical axis.
+
+    With an active `repro.distributed.sharding` mesh whose "rows" rule maps
+    to a mesh axis that divides n, each device accumulates its local row
+    slab and the (m, m)/(m,) results are psum-reduced.  Otherwise (no mesh,
+    or indivisible n) this is exactly the single-device accumulation.
+    """
+    from repro.distributed import sharding as shd
+    from repro.kernels import dispatch
+
+    def local(x_loc, w_loc, xm_rep):
+        return dispatch.gram_accumulate(kernel, x_loc, xm_rep, w_loc,
+                                        backend=backend, tile=tile,
+                                        interpret=interpret)
+
+    act = shd.active()
+    if act is not None:
+        row_axes = act.spec(("rows", None), x.shape)[0]
+        if row_axes is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            axes = ((row_axes,) if isinstance(row_axes, str)
+                    else tuple(row_axes))
+
+            def body(x_loc, w_loc, xm_rep):
+                g, r = local(x_loc, w_loc, xm_rep)
+                return jax.lax.psum(g, axes), jax.lax.psum(r, axes)
+
+            return shard_map(
+                body, mesh=act.mesh,
+                in_specs=(P(row_axes, None), P(row_axes), P(None, None)),
+                out_specs=(P(None, None), P(None)),
+            )(x, y, xm)
+    return local(x, y, xm)
+
+
+def fit_streaming(
+    kernel: Kernel,
+    x: Array,
+    y: Array,
+    lam: float,
+    landmark_idx: Array,
+    *,
+    tile: int = 8192,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    jitter: float = 1e-6,
+) -> NystromFit:
+    """`fit_from_landmarks` without ever materializing K_nm.
+
+    Matches the dense solve to fp32 reduction-order tolerance
+    (tests/test_streaming_nystrom.py: <= 1e-4 relative on beta).
+    """
+    _require_sentinel_safe(kernel)
+    n = x.shape[0]
+    xm = jnp.take(x, landmark_idx, axis=0)
+    g, rhs = streaming_normal_eq(kernel, x, y, xm, tile=tile,
+                                 backend=backend, interpret=interpret)
+    # k_mm is O(m^2) work — the core path keeps it in the input dtype, which
+    # the dense solve also uses (dtype parity matters more than MXU here).
+    k_mm = kernel_matrix(kernel, xm)
+    beta = solve_normal_eq(g, rhs, k_mm.astype(g.dtype), n, lam,
+                           jitter=jitter)
+    return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx,
+                      lam=lam)
+
+
+def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
+                      *, tile: int = 8192,
+                      backend: str | None = None) -> Array:
+    """Batched predict: O(tile * m) memory, any n_new."""
+    from repro.kernels import dispatch
+
+    _require_sentinel_safe(kernel)
+    n, d = x_new.shape
+    tile = min(tile, n)
+    np_ = round_up(n, tile)
+    tiles = pad_rows_sentinel(x_new, np_).reshape(np_ // tile, tile, d)
+
+    def one(xt):
+        return dispatch.kernel_matrix(kernel, xt, fit_.landmarks,
+                                      backend=backend) @ fit_.beta
+
+    return jax.lax.map(one, tiles).reshape(np_)[:n]

@@ -17,8 +17,10 @@ absolute ridge mu = n * lam,
 
 which is exact when S = [n], w = 1 (then l_hat = diag(K (K + mu)^{-1})).
 These are *host-recursive* drivers (dynamic sketch sizes) around jit-able
-dense linear algebra — on TPU the inner K_{:,S} blocks route through the
-Pallas `pairwise` kernel.
+dense linear algebra.  The inner K_{:,S} blocks go through
+`repro.kernels.dispatch.kernel_matrix`, which resolves to the Pallas
+`pairwise` kernel on TPU and the fused-XLA reference elsewhere
+(override with backend= or the REPRO_KERNEL_BACKEND env var).
 """
 
 from __future__ import annotations
@@ -30,9 +32,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kernels import Kernel, kernel_matrix
+from repro.core.kernels import Kernel
 
 Array = jax.Array
+
+
+def kernel_matrix(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
+    """Backend-dispatched kernel matrix (Pallas `pairwise` on TPU)."""
+    from repro.kernels import dispatch
+    return dispatch.kernel_matrix(kernel, x, y)
 
 
 class RLSResult(NamedTuple):

@@ -12,9 +12,17 @@ def sample_with_replacement(key: jax.Array, probs: Array, m: int) -> Array:
     """Draw m landmark indices iid from the categorical distribution probs.
 
     This is the sampling model of paper Theorem 2 (columns chosen with
-    replacement).  Implemented with jax.random.categorical over log-probs so
-    it is vectorized and reproducible on accelerator.
+    replacement).  Small problems use jax.random.categorical over log-probs
+    (vectorized, reproducible on accelerator); it materializes an (m, n)
+    gumbel field, so past ~16M cells we switch to inverse-CDF sampling
+    (cumsum + searchsorted), which is O(n + m log n) and O(n) memory — at
+    n = 1e6, m = 1024 the categorical path would allocate 4 GB.
     """
+    n = probs.shape[0]
+    if n * m > (1 << 24):
+        cdf = jnp.cumsum(probs)
+        u = jax.random.uniform(key, (m,), dtype=cdf.dtype) * cdf[-1]
+        return jnp.clip(jnp.searchsorted(cdf, u), 0, n - 1).astype(jnp.int32)
     logits = jnp.log(jnp.maximum(probs, 1e-38))
     return jax.random.categorical(key, logits, shape=(m,))
 

@@ -5,7 +5,11 @@ ops.py (jit'd public wrapper) / ref.py (pure-jnp oracle) structure and is
 validated in interpret mode on CPU (tests/test_pallas_*.py).
 
   pairwise        — tiled stationary-kernel (Gram) matrix      [paper hot spot]
+  gram            — fused kernel-tile + K_nm^T K_nm accumulate [streaming solve]
   kde             — tiled direct Gaussian KDE                  [paper hot spot]
   flash_attention — causal GQA flash attention (+ SWA)         [LM prefill]
   ssd             — Mamba2 SSD chunked scan                    [SSM mixing]
+
+`repro.kernels.dispatch` picks Pallas vs fused-XLA per call site ('auto' =
+Pallas on TPU; override with REPRO_KERNEL_BACKEND).
 """

@@ -1,0 +1,70 @@
+"""Backend dispatch: route kernel-matrix hot spots through Pallas or XLA.
+
+The core solvers (`nystrom`, `rls`) are written against an abstract
+kernel-matrix contract; this module decides, once, which implementation
+serves it:
+
+  * ``pallas`` — the tiled Pallas kernels (`repro.kernels.pairwise` /
+    `repro.kernels.gram`).  Native on TPU; off-TPU they run in interpret
+    mode, which is correct but slow — useful for validation only.
+  * ``xla``    — the fused pure-jnp references in `repro.core.kernels` and
+    the lax.scan streaming path.  The right choice on CPU/GPU.
+  * ``auto``   — ``pallas`` on TPU, ``xla`` elsewhere.  Overridable with the
+    ``REPRO_KERNEL_BACKEND`` environment variable.
+
+Imports of the Pallas packages are deferred to call time so `repro.core`
+never depends on `repro.kernels` at import (the reverse edge already
+exists: pairwise/gram ops adapt `repro.core.kernels` objects).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.core import kernels as core_kernels
+
+Array = jax.Array
+
+BACKENDS = ("auto", "xla", "pallas")
+
+
+def resolve(backend: str | None = None) -> str:
+    """'auto'/None -> 'pallas' on TPU else 'xla'; explicit names pass through."""
+    backend = backend or "auto"
+    if backend == "auto":
+        backend = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+    return backend
+
+
+def kernel_matrix(kernel: core_kernels.Kernel, x: Array,
+                  y: Array | None = None, *, backend: str | None = None,
+                  **kw) -> Array:
+    """K(x, y) through the resolved backend (Pallas `pairwise` on TPU)."""
+    if resolve(backend) == "pallas":
+        from repro.kernels.pairwise import ops as pw_ops
+        return pw_ops.kernel_matrix(kernel, x, y, **kw)
+    return core_kernels.kernel_matrix(kernel, x, y)
+
+
+def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
+                    w: Array, *, backend: str | None = None,
+                    tile: int = 8192, interpret: bool | None = None,
+                    **kw) -> tuple[Array, Array]:
+    """(K_nm^T K_nm, K_nm^T w) through the resolved backend.
+
+    The Pallas path is the fused one-pass `gram` kernel (row block <= 256,
+    set by the MXU tiling); the XLA path is the lax.scan row-tile
+    accumulation in `repro.core.nystrom` with `tile` rows per step.  Neither
+    ever materializes the (n, m) cross-kernel matrix.
+    """
+    if resolve(backend) == "pallas":
+        from repro.kernels.gram import ops as gram_ops
+        return gram_ops.gram_matrix(kernel, x, y, w, interpret=interpret, **kw)
+    from repro.core import nystrom
+    return nystrom.scan_normal_eq(kernel, x, y, w, tile=tile)

@@ -1,0 +1,1 @@
+"""Fused streaming Gram accumulation kernel (kernel.py / ops.py / ref.py)."""

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused kernel-tile + Gram accumulation in one pass.
+
+The streaming Nystrom solve needs G = K_nm^T K_nm and rhs = K_nm^T w without
+ever materializing the (n, m) cross-kernel matrix.  The TPU-native
+formulation fuses the stationary-kernel map (same math as `pairwise`) with
+the MXU rank-bm update of the Gram block:
+
+  * grid (m/bn, m/bn, n/bm) — the row dimension is innermost, so each (j, k)
+    Gram block stays resident in VMEM while all row tiles stream through it
+    (the canonical Pallas accumulation pattern: init at i == 0, += after);
+  * per step, two (bm, bn) kernel tiles kj = k(X_i, Y_j), kk = k(X_i, Y_k)
+    are built in VMEM from the MXU cross term and fused element-wise map —
+    they die in registers/VMEM, never visiting HBM;
+  * the rhs accumulator rides along gated on k == 0 (its block index depends
+    on j only, so it would be multi-counted otherwise);
+  * VMEM per program at d=128, bm=bn=256: x (bm, d) + 2 y-tiles (bn, d)
+    + 2 kernel tiles (bm, bn) + G block (bn, bn) fp32 ~= 1.1 MB — far under
+    budget, so the row stream double-buffers.
+
+Padded rows are placed at the ROW_SENTINEL coordinate by ops.py: their
+distance to any real landmark is ~1e6, and every kernel map underflows
+exp(-1e6) to exactly 0.0, so they contribute nothing — no masking needed in
+the body.  Padded landmark columns produce garbage only in the sliced-off
+region of G/rhs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# Shared with the core streaming solve: rows parked here are ~1e6 away from
+# any real data, so all supported kernel maps underflow to exactly 0.0.
+from repro.core.kernels import ROW_SENTINEL  # noqa: E402,F401
+
+
+def _kernel_tile(x, y, *, kind: str, nu: float, a: float,
+                 inv_two_sigma_sq: float):
+    """(bm, d) x (bn, d) -> (bm, bn) kernel tile; same math as pairwise."""
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=x.dtype
+    )
+    x2 = jnp.sum(x * x, axis=1)[:, None]
+    y2 = jnp.sum(y * y, axis=1)[None, :]
+    sq = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+    if kind == "gaussian":
+        return jnp.exp(-sq * inv_two_sigma_sq)
+    ar = a * jnp.sqrt(sq)
+    if nu == 0.5:
+        return jnp.exp(-ar)
+    if nu == 1.5:
+        return (1.0 + ar) * jnp.exp(-ar)
+    return (1.0 + ar + ar * ar * (1.0 / 3.0)) * jnp.exp(-ar)  # nu == 2.5
+
+
+def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *, kind: str,
+               nu: float, a: float, inv_two_sigma_sq: float):
+    k = pl.program_id(1)
+    i = pl.program_id(2)
+    # f32 compute floor; preserves f64 when fed f64 (interpret-mode parity
+    # tests under enable_x64 — real TPUs only ever see f32/bf16 inputs).
+    acc = jnp.promote_types(x_ref.dtype, jnp.float32)
+    x = x_ref[...].astype(acc)    # (bm, d) row tile
+    yj = yj_ref[...].astype(acc)  # (bn, d) landmark tile j
+    yk = yk_ref[...].astype(acc)  # (bn, d) landmark tile k
+    tile = functools.partial(_kernel_tile, kind=kind, nu=nu, a=a,
+                             inv_two_sigma_sq=inv_two_sigma_sq)
+    kj = tile(x, yj)                      # (bm, bn)
+    kk = tile(x, yk)
+
+    @pl.when(i == 0)
+    def _():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    g_ref[...] += jax.lax.dot_general(    # rank-bm MXU update of G[j, k]
+        kj, kk, (((0,), (0,)), ((), ())), preferred_element_type=acc
+    ).astype(g_ref.dtype)
+
+    @pl.when(jnp.logical_and(i == 0, k == 0))
+    def _():
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    @pl.when(k == 0)
+    def _():
+        w = w_ref[...].astype(acc)     # (bm, 1)
+        r_ref[...] += jax.lax.dot_general(
+            kj, w, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc,
+        ).astype(r_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "nu", "a", "sigma", "bm", "bn", "out_dtype",
+                     "interpret"),
+)
+def gram_padded(
+    x: Array,
+    y: Array,
+    w: Array,
+    *,
+    kind: str = "matern",
+    nu: float = 1.5,
+    a: float = 1.0,
+    sigma: float = 1.0,
+    bm: int = 256,
+    bn: int = 256,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Core pallas_call; requires n % bm == 0 and m % bn == 0 (see ops.py)."""
+    n, d = x.shape
+    m, _ = y.shape
+    assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
+    grid = (m // bn, m // bn, n // bm)
+    body = functools.partial(
+        _gram_body,
+        kind=kind,
+        nu=float(nu),
+        a=float(a),
+        inv_two_sigma_sq=1.0 / (2.0 * float(sigma) ** 2),
+    )
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda j, k, i: (i, 0)),   # row tile
+            pl.BlockSpec((bn, d), lambda j, k, i: (j, 0)),   # landmarks j
+            pl.BlockSpec((bn, d), lambda j, k, i: (k, 0)),   # landmarks k
+            pl.BlockSpec((bm, 1), lambda j, k, i: (i, 0)),   # responses
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bn), lambda j, k, i: (j, k)),  # G block
+            pl.BlockSpec((bn, 1), lambda j, k, i: (j, 0)),   # rhs block
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, m), out_dtype),
+            jax.ShapeDtypeStruct((m, 1), out_dtype),
+        ],
+        interpret=interpret,
+    )(x, y, y, w)

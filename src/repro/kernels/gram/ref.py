@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused gram kernel.
+
+Given the design X (n, d), landmarks Y (m, d) and responses w (n,), the
+Nystrom normal equations need
+
+    G   = K_nm^T K_nm    (m, m)
+    rhs = K_nm^T w       (m,)
+
+with K_nm[i, j] = k(||x_i - y_j||).  The oracle materializes K_nm — it exists
+only to validate the Pallas kernel (tests/test_pallas_kernels.py) and the
+lax.scan streaming path at small n; production code never forms K_nm.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise import ref as pw_ref
+
+Array = jax.Array
+
+
+def gram(
+    x: Array,
+    y: Array,
+    w: Array,
+    *,
+    kind: str = "matern",
+    nu: float = 1.5,
+    a: float = 1.0,
+    sigma: float = 1.0,
+    out_dtype=jnp.float32,
+) -> tuple[Array, Array]:
+    """(K_nm^T K_nm, K_nm^T w) via the dense (n, m) matrix (oracle only)."""
+    k_nm = pw_ref.pairwise(x, y, kind=kind, nu=nu, a=a, sigma=sigma,
+                           out_dtype=jnp.float32)
+    g = jax.lax.dot_general(k_nm, k_nm, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    rhs = jax.lax.dot_general(k_nm, w.astype(jnp.float32),
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return g.astype(out_dtype), rhs.astype(out_dtype)

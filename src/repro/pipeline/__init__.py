@@ -1,0 +1,15 @@
+"""End-to-end SA→Nyström KRR pipeline (the paper as a production system).
+
+    from repro.pipeline import PipelineConfig, SAKRRPipeline
+
+    pipe = SAKRRPipeline(PipelineConfig(nu=1.5, tile=8192)).fit(x, y)
+    y_hat = pipe.predict(x_new)
+
+See `repro.pipeline.api` for the full contract.
+"""
+
+from repro.pipeline.api import (  # noqa: F401
+    PipelineConfig,
+    PipelineState,
+    SAKRRPipeline,
+)

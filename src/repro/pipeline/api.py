@@ -1,0 +1,180 @@
+"""Config-driven SA→Nyström estimator: KDE → SA leverage → landmark
+sampling → streaming Nyström solve → batched predict.
+
+This is the deployment surface of the paper: every stage is Õ(n) time and
+O(tile · m) memory, so a single CPU fits n = 10^6 and a mesh shards rows
+over the "rows" logical axis (mesh axis "data") with one psum for the
+normal equations — activate a mesh with `repro.distributed.sharding` and
+the same `fit` call runs sharded, no code change.
+
+Stages (all overridable through `PipelineConfig`):
+
+  1. density   — `repro.core.kde.estimate_densities` (binned FFT KDE for
+                 d <= 3, O(n); direct tiled KDE otherwise);
+  2. leverage  — `repro.core.leverage.sa_leverage` (Eq. 6 closed form /
+                 grid / quadrature), elementwise in the densities;
+  3. sampling  — m landmarks iid ~ q (paper Thm 2, with replacement);
+  4. solve     — `repro.core.nystrom.fit_streaming`: G = K_nm^T K_nm and
+                 rhs = K_nm^T y accumulated over row tiles (lax.scan on the
+                 XLA backend, the fused Pallas `gram` kernel on TPU) — the
+                 (n, m) cross-kernel matrix is never materialized;
+  5. predict   — `nystrom.predict_streaming`, O(tile · m) per batch.
+
+`fit` records per-stage wall-clock seconds in `state.seconds` so benchmarks
+(benchmarks/bench_pipeline.py) get the trajectory for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kde, kernels, leverage, nystrom, sampling
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Everything the pipeline needs, serializable via to_dict/from_dict.
+
+    lam / num_landmarks default to the paper's rates when None:
+    lam = 0.075 n^{-2/3}, m = 5 n^{1/3} (clipped to >= 8).
+    """
+
+    # kernel
+    kernel_kind: str = "matern"       # "matern" | "gaussian"
+    nu: float = 1.5                   # Matern smoothness (0.5 / 1.5 / 2.5)
+    lengthscale: float = 1.0          # Matern lengthscale
+    sigma: float = 1.0                # Gaussian bandwidth
+    # regression
+    lam: float | None = None
+    num_landmarks: int | None = None
+    jitter: float = 1e-6
+    # leverage estimation
+    leverage_method: str = "closed_form"   # closed_form | grid | quadrature
+    kde_method: str = "auto"               # auto | binned | direct
+    kde_grid_size: int | None = None
+    density_floor: float | None = None
+    # execution
+    tile: int = 8192                  # rows per streaming slab
+    backend: str = "auto"             # auto | xla | pallas (dispatch.resolve)
+    seed: int = 0
+
+    def build_kernel(self) -> kernels.Kernel:
+        if self.kernel_kind == "matern":
+            return kernels.Matern(nu=self.nu, lengthscale=self.lengthscale)
+        if self.kernel_kind == "gaussian":
+            return kernels.Gaussian(sigma=self.sigma)
+        raise ValueError(f"unknown kernel_kind {self.kernel_kind!r}")
+
+    def resolve_lam(self, n: int) -> float:
+        return self.lam if self.lam is not None else 0.075 * n ** (-2.0 / 3.0)
+
+    def resolve_num_landmarks(self, n: int) -> int:
+        if self.num_landmarks is not None:
+            return self.num_landmarks
+        return max(8, int(5 * n ** (1.0 / 3.0)))
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "PipelineConfig":
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Everything `fit` produced (arrays are O(n) or O(m), never O(n·m))."""
+
+    n: int
+    d: int
+    lam: float
+    num_landmarks: int
+    densities: Array          # (n,)
+    leverage: leverage.SALeverage
+    fit: nystrom.NystromFit
+    seconds: dict[str, float]  # per-stage wall clock
+
+
+class SAKRRPipeline:
+    """sklearn-shaped estimator over the streaming SA→Nyström stack."""
+
+    def __init__(self, config: PipelineConfig | None = None):
+        self.config = config or PipelineConfig()
+        self.kernel = self.config.build_kernel()
+        self.state: PipelineState | None = None
+
+    # ------------------------------------------------------------------ fit --
+    def fit(self, x: Array, y: Array) -> "SAKRRPipeline":
+        cfg = self.config
+        n, d = x.shape
+        lam = cfg.resolve_lam(n)
+        m = cfg.resolve_num_landmarks(n)
+        seconds: dict[str, float] = {}
+
+        t0 = time.perf_counter()
+        dens = kde.estimate_densities(x, method=cfg.kde_method,
+                                      grid_size=cfg.kde_grid_size)
+        dens = jax.block_until_ready(dens)
+        seconds["kde"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        sa = leverage.sa_leverage(dens, lam, self.kernel, d, n=n,
+                                  method=cfg.leverage_method,
+                                  floor=cfg.density_floor)
+        jax.block_until_ready(sa.probs)
+        seconds["leverage"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        idx = sampling.sample_with_replacement(
+            jax.random.PRNGKey(cfg.seed), sa.probs, m)
+        idx = jax.block_until_ready(idx)
+        seconds["sample"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        fit_ = nystrom.fit_streaming(self.kernel, x, y, lam, idx,
+                                     tile=cfg.tile, backend=_backend(cfg),
+                                     jitter=cfg.jitter)
+        jax.block_until_ready(fit_.beta)
+        seconds["solve"] = time.perf_counter() - t0
+
+        self.state = PipelineState(n=n, d=d, lam=lam, num_landmarks=m,
+                                   densities=dens, leverage=sa, fit=fit_,
+                                   seconds=seconds)
+        return self
+
+    # -------------------------------------------------------------- predict --
+    def predict(self, x_new: Array, tile: int | None = None) -> Array:
+        st = self._fitted_state()
+        return nystrom.predict_streaming(
+            self.kernel, st.fit, x_new,
+            tile=tile if tile is not None else self.config.tile,
+            backend=_backend(self.config))
+
+    def fitted(self, x_train: Array) -> Array:
+        """In-sample predictions (the paper's R_n functional)."""
+        return self.predict(x_train)
+
+    # ---------------------------------------------------------------- misc --
+    def _fitted_state(self) -> PipelineState:
+        if self.state is None:
+            raise RuntimeError("call fit(x, y) before predict()")
+        return self.state
+
+    @property
+    def d_stat(self) -> float:
+        return float(self._fitted_state().leverage.d_stat)
+
+    @property
+    def seconds(self) -> dict[str, float]:
+        return dict(self._fitted_state().seconds)
+
+
+def _backend(cfg: PipelineConfig) -> str | None:
+    return None if cfg.backend == "auto" else cfg.backend

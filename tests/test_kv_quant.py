@@ -3,8 +3,10 @@ vs the bf16 cache path + hypothesis property (scale covers absmax)."""
 
 from __future__ import annotations
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -112,3 +112,23 @@ def test_density_floor_behaviour():
     out = np.asarray(leverage.density_floor(p, 0.1))
     assert out[0] == pytest.approx((0.05 + 1e-6) / 1.5)
     assert out[1] == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("method", ["closed_form", "grid", "quadrature"])
+@pytest.mark.parametrize("kern", [K.Matern(nu=1.5), K.Gaussian(sigma=0.7)])
+def test_zero_density_yields_finite_leverage(method, kern):
+    """kde_binned clips its FFT output at 0, so p_i = 0.0 reaches sa_leverage;
+    every method must clamp (DENSITY_EPS) instead of emitting NaN/inf."""
+    p = jnp.asarray([0.0, 0.0, 1e-12, 0.3, 1.1])
+    sa = leverage.sa_leverage(p, lam=1e-3, kernel=kern, d=1, n=5, method=method)
+    assert np.isfinite(np.asarray(sa.rescaled)).all(), sa.rescaled
+    assert np.isfinite(np.asarray(sa.probs)).all(), sa.probs
+    np.testing.assert_allclose(float(jnp.sum(sa.probs)), 1.0, rtol=1e-5)
+
+
+def test_zero_density_closed_forms_finite_directly():
+    p = jnp.zeros((4,))
+    mat = leverage.matern_closed_form(p, 1e-3, K.Matern(nu=1.5), d=1)
+    gau = leverage.gaussian_closed_form(p, 1e-3, K.Gaussian(sigma=1.0), d=1)
+    assert np.isfinite(np.asarray(mat)).all()
+    assert np.isfinite(np.asarray(gau)).all()
