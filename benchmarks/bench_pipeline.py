@@ -7,6 +7,11 @@ runs, so successive commits build a trajectory.
 
   PYTHONPATH=src python -m benchmarks.bench_pipeline [--n-max 262144]
   PYTHONPATH=src python -m benchmarks.run --only pipeline --json BENCH_pipeline.json
+
+Stage subsets (the pipeline is a stage list, so partial runs are first-class;
+this is the CI smoke hook for stage-timing regressions):
+
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --stages kde --n 8192
 """
 
 from __future__ import annotations
@@ -21,7 +26,7 @@ import jax
 
 from repro.core import krr
 from repro.data import krr_data
-from repro.pipeline import PipelineConfig, SAKRRPipeline
+from repro.pipeline import PipelineConfig, SAKRRPipeline, default_stages
 
 
 def _peak_rss_mb() -> float:
@@ -38,16 +43,27 @@ def append_records(path: str, records: list[dict]) -> None:
         json.dump(existing + records, f, indent=1)
 
 
-def bench_one(n: int, tile: int, m: int | None, seed: int = 0) -> dict:
+def _stage_subset(cfg: PipelineConfig, names: list[str]):
+    """Default stage list truncated after the last requested stage (earlier
+    stages still run — later ones need their artifacts)."""
+    stages = default_stages(cfg)
+    known = {s.name for s in stages}
+    unknown = sorted(set(names) - known)
+    if unknown:
+        raise SystemExit(f"unknown stage(s) {unknown}; "
+                         f"pick from {sorted(known)}")
+    last = max(i for i, s in enumerate(stages) if s.name in names)
+    return stages[:last + 1]
+
+
+def bench_one(n: int, tile: int, m: int | None, seed: int = 0,
+              stages: list[str] | None = None) -> dict:
     data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
     cfg = PipelineConfig(nu=1.5, tile=tile, num_landmarks=m)
+    stage_list = _stage_subset(cfg, stages) if stages else None
     t0 = time.perf_counter()
-    pipe = SAKRRPipeline(cfg).fit(data.x, data.y)
+    pipe = SAKRRPipeline(cfg, stages=stage_list).fit(data.x, data.y)
     fit_s = time.perf_counter() - t0
-    n_eval = min(n, 50_000)
-    t0 = time.perf_counter()
-    pred = jax.block_until_ready(pipe.predict(data.x[:n_eval]))
-    predict_s = time.perf_counter() - t0
     m_used = pipe.state.num_landmarks
     rec = {
         "section": "pipeline",
@@ -56,30 +72,42 @@ def bench_one(n: int, tile: int, m: int | None, seed: int = 0) -> dict:
         "tile": tile,
         "fit_seconds": round(fit_s, 4),
         "stage_seconds": {k: round(v, 4) for k, v in pipe.seconds.items()},
-        "predict_seconds": round(predict_s, 4),
-        "predict_n": n_eval,
-        "rows_per_second": round(n / max(fit_s, 1e-9)),
-        "risk": float(krr.in_sample_risk(pred, data.f_star[:n_eval])),
-        "d_stat": float(pipe.d_stat),
-        # memory story: the streaming slab is the largest transient buffer
-        "slab_mb": round(tile * m_used * 4 / 2**20, 2),
         "peak_rss_mb": round(_peak_rss_mb(), 1),
     }
+    if pipe.state.fit is not None:   # full run: throughput, slab, predict
+        rec["rows_per_second"] = round(n / max(fit_s, 1e-9))
+        # memory story: the streaming slab is the largest transient buffer
+        rec["slab_mb"] = round(tile * m_used * 4 / 2**20, 2)
+        n_eval = min(n, 50_000)
+        t0 = time.perf_counter()
+        pred = jax.block_until_ready(pipe.predict(data.x[:n_eval]))
+        rec["predict_seconds"] = round(time.perf_counter() - t0, 4)
+        rec["predict_n"] = n_eval
+        rec["risk"] = float(krr.in_sample_risk(pred, data.f_star[:n_eval]))
+        rec["d_stat"] = float(pipe.d_stat)
     print(",".join(f"{k}={v}" for k, v in rec.items() if k != "stage_seconds"))
+    print("  stages: " + ",".join(f"{k}={v}" for k, v in
+                                  rec["stage_seconds"].items()))
     return rec
 
 
 def main(json_out: str | None = "BENCH_pipeline.json",
-         n_max: int = 262_144) -> None:
+         n_max: int = 262_144, n_only: int | None = None,
+         stages: list[str] | None = None) -> None:
     print("\n## pipeline (streaming SA->Nystrom)")
     records = []
-    n = 16_384
-    while n <= n_max:
-        records.append(bench_one(n, tile=16_384, m=None))
-        n *= 4
-    # tile sweep at the top size: time/memory trade of the streaming slab
-    for tile in (4_096, 65_536):
-        records.append(bench_one(n_max, tile=tile, m=None))
+    if n_only is not None or stages:
+        n = n_only or 16_384
+        records.append(bench_one(n, tile=min(n, 16_384), m=None,
+                                 stages=stages))
+    else:
+        n = 16_384
+        while n <= n_max:
+            records.append(bench_one(n, tile=16_384, m=None))
+            n *= 4
+        # tile sweep at the top size: time/memory trade of the streaming slab
+        for tile in (4_096, 65_536):
+            records.append(bench_one(n_max, tile=tile, m=None))
     if json_out:
         append_records(json_out, records)
         print(f"[appended {len(records)} records to {json_out}]")
@@ -88,6 +116,12 @@ def main(json_out: str | None = "BENCH_pipeline.json",
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-max", type=int, default=262_144)
+    ap.add_argument("--n", type=int, default=None,
+                    help="single-point run at this n (no sweep)")
+    ap.add_argument("--stages", default=None,
+                    help="comma-separated stage subset, e.g. 'kde' or "
+                         "'kde,leverage' (runs prerequisites, stops there)")
     ap.add_argument("--json", default="BENCH_pipeline.json")
     args = ap.parse_args()
-    main(json_out=args.json, n_max=args.n_max)
+    main(json_out=args.json or None, n_max=args.n_max, n_only=args.n,
+         stages=args.stages.split(",") if args.stages else None)

@@ -87,17 +87,23 @@ def kde_sharded(x: Array, kde_sample: Array, h: float) -> Array:
 
 
 def kde_binned_sharded(x: Array, h: float, *, grid_size: int = 96,
-                       lo: Array | None = None, hi: Array | None = None) -> Array:
+                       lo: Array | None = None, hi: Array | None = None,
+                       tile: int | None = None,
+                       backend: str | None = None) -> Array:
     """Paper-faithful Õ(n) KDE, sharded: the §Perf replacement for the
     O(n·m_kde) direct tile (see EXPERIMENTS.md §Perf cell C).
 
-    shard_map body: scatter-add LOCAL rows to a local copy of the (small,
-    replicated) grid -> psum the grids across all mesh axes -> identical FFT
-    smoothing everywhere -> purely local multilinear gather.  Per-chip bytes
-    drop from O(n_loc * m_kde) to O(n_loc + g^d); the only collective is the
-    3.5 MB grid psum.  Bounds (lo, hi) must be static for jit; pass data
-    bounds or rely on the caller's normalisation (default [-5, 5]^d covers
-    normalised designs).
+    shard_map body: stream LOCAL rows through the CIC deposit
+    (`kernels.dispatch.binned_scatter` — windowed XLA scatter or the Pallas
+    `kde_binned` kernel per `backend`, O(tile 2^d) transient per chip) into
+    a local copy of the (small, replicated) grid -> psum the grids across all mesh
+    axes -> identical FFT smoothing everywhere -> purely local multilinear
+    gather.  Per-chip bytes drop from O(n_loc * m_kde) to O(tile + g^d); the
+    only collective is the 3.5 MB grid psum.  Bounds (lo, hi) must be static
+    for jit; pass data bounds or rely on the caller's normalisation (default
+    [-5, 5]^d covers normalised designs).  This is the KDE stage the
+    pipeline (`repro.pipeline.stages.DensityStage`) runs under an active
+    mesh.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -111,31 +117,22 @@ def kde_binned_sharded(x: Array, h: float, *, grid_size: int = 96,
         hi = jnp.full((d,), 5.0, x.dtype)
     spacing = (hi - lo) / (grid_size - 1)
 
-    def body(x_loc):
-        grid = core_kde._binned_grid(x_loc, lo, spacing, grid_size, d)
-        if act is not None:
-            grid = jax.lax.psum(grid, axis_name=tuple(
-                a for a in act.mesh.axis_names))
+    def body(x_loc, *, psum_axes=()):
+        from repro.kernels import dispatch
+        grid = dispatch.binned_scatter(x_loc, lo, spacing, grid_size,
+                                       backend=backend, tile=tile)
+        if psum_axes:   # only meaningful inside shard_map
+            grid = jax.lax.psum(grid, axis_name=psum_axes)
         smooth = core_kde._fft_smooth(grid, spacing, jnp.asarray(h, x.dtype),
                                       grid_size, d)
-        pos = (x_loc - lo[None, :]) / spacing[None, :]
-        base = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, grid_size - 2)
-        frac = pos - base
-        out = jnp.zeros(x_loc.shape[0], dtype=x.dtype)
-        for corner in range(2 ** d):
-            offs = jnp.array([(corner >> k) & 1 for k in range(d)],
-                             dtype=jnp.int32)
-            idx = base + offs[None, :]
-            w = jnp.prod(jnp.where(offs[None, :] == 1, frac, 1.0 - frac),
-                         axis=1)
-            out = out + w * smooth[tuple(idx[:, k] for k in range(d))]
+        out = core_kde.gather_cic(smooth, x_loc, lo, spacing, grid_size)
         return jnp.maximum(out, 0.0) / (n * core_kde.gaussian_norm(d, h))
 
-    if act is None:
-        return body(x)
+    if act is None or n % act.mesh.devices.size != 0:
+        return body(x)   # single-device (or non-dividing n): no collective
     axes = tuple(act.mesh.axis_names)
-    return shard_map(body, mesh=act.mesh, in_specs=P(axes, None),
-                     out_specs=P(axes))(x)
+    return shard_map(functools.partial(body, psum_axes=axes), mesh=act.mesh,
+                     in_specs=P(axes, None), out_specs=P(axes))(x)
 
 
 def sa_nystrom_pipeline(

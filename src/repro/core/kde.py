@@ -16,17 +16,29 @@ error multiplicatively, so a sub-optimal KDE rate suffices):
     oracle; on TPU the Pallas kernel `repro.kernels.kde` computes the same
     sum in VMEM tiles (use it for d > 3 or small n where grids are wasteful).
 
-Both return *densities* (integrate to 1); bandwidth defaults to Scott's rule.
+The deposit stage of ``kde_binned`` streams through ``scatter_cic``: ONE
+windowed scatter-add per row tile deposits each point's (2,)^d stencil in a
+single update (~10x faster than the historical one-scatter-per-corner form
+on CPU — the scatter loop runs n times, not n 2^d times), with a `lax.scan`
+over row tiles bounding transient memory at O(tile 2^d).  On TPU the same
+deposit runs as the Pallas `repro.kernels.kde_binned` kernel (VMEM-resident
+grid); `repro.kernels.dispatch.binned_scatter` routes between them, and
+`repro.core.distributed.kde_binned_sharded` shards the row stream over the
+mesh with one grid psum.
+
+Both estimators return *densities* (integrate to 1); bandwidth defaults to
+Scott's rule.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.kernels import round_up
 
 Array = jax.Array
 
@@ -51,19 +63,86 @@ def kde_direct(query: Array, data: Array, h: float | Array) -> Array:
     return jnp.sum(kern, axis=1) / (data.shape[0] * gaussian_norm(data.shape[1], h))
 
 
-@functools.partial(jax.jit, static_argnames=("grid_size", "d"))
-def _binned_grid(data: Array, lo: Array, spacing: Array, grid_size: int, d: int) -> Array:
-    """Cloud-in-cell scatter of points onto a d-dim regular grid."""
-    pos = (data - lo[None, :]) / spacing[None, :]            # (n, d) fractional index
+# ------------------------------------------------------------ CIC deposit --
+
+def cic_prep(points: Array, lo: Array, spacing: Array,
+             grid_size: int) -> tuple[Array, Array]:
+    """Fractional lattice coordinates -> (base cell (n, d) int32, frac (n, d)).
+
+    Base cells are clipped to [0, grid_size - 2] so the (2,)^d stencil stays
+    in bounds; with the +-4h grid margins of `kde_binned` the clip is a
+    no-op for in-range data.
+    """
+    pos = (points - lo[None, :]) / spacing[None, :]
     base = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, grid_size - 2)
-    frac = pos - base                                          # in [0, 1)
-    grid = jnp.zeros((grid_size,) * d, dtype=data.dtype)
+    return base, pos - base
+
+
+def _cic_stencil(frac: Array, weights: Array | None = None) -> Array:
+    """(n, d) fracs -> (n, 2, ..., 2) multilinear deposit stencil."""
+    n, d = frac.shape
+    upd = None
+    for k in range(d):
+        wk = jnp.stack([1.0 - frac[:, k], frac[:, k]], axis=1)  # (n, 2)
+        wk = wk.reshape((n,) + (1,) * k + (2,))
+        upd = wk if upd is None else upd[..., None] * wk
+    if weights is not None:
+        upd = upd * weights.reshape((n,) + (1,) * d)
+    return upd
+
+
+@functools.partial(jax.jit, static_argnames=("grid_size", "tile"))
+def scatter_cic(points: Array, lo: Array, spacing: Array, grid_size: int,
+                *, weights: Array | None = None,
+                tile: int | None = None) -> Array:
+    """Cloud-in-cell deposit of (weighted) points onto a (grid_size,)^d grid.
+
+    Each point's whole (2,)^d stencil lands in ONE windowed scatter-add
+    update (update_window_dims), so the serial scatter loop runs n times
+    instead of n 2^d — on CPU this is the difference between the deposit
+    dominating the KDE and disappearing into the FFT's shadow.  With `tile`
+    set, rows stream through a lax.scan and the transient stencil buffer is
+    O(tile 2^d) instead of O(n 2^d); padded rows carry zero weight.
+    """
+    n, d = points.shape
+    dnums = jax.lax.ScatterDimensionNumbers(
+        update_window_dims=tuple(range(1, d + 1)),
+        inserted_window_dims=(),
+        scatter_dims_to_operand_dims=tuple(range(d)))
+
+    def deposit(grid, pts, w):
+        base, frac = cic_prep(pts, lo, spacing, grid_size)
+        return jax.lax.scatter_add(grid, base, _cic_stencil(frac, w), dnums)
+
+    grid0 = jnp.zeros((grid_size,) * d, dtype=points.dtype)
+    if tile is None or tile >= n:
+        return deposit(grid0, points, weights)
+    np_ = round_up(n, tile)
+    w = jnp.ones((n,), points.dtype) if weights is None else weights
+    pts = jnp.pad(points, ((0, np_ - n), (0, 0))).reshape(-1, tile, d)
+    wt = jnp.pad(w, (0, np_ - n)).reshape(-1, tile)
+
+    def step(grid, pw):
+        return deposit(grid, pw[0], pw[1]), None
+
+    grid, _ = jax.lax.scan(step, grid0, (pts, wt))
+    return grid
+
+
+@functools.partial(jax.jit, static_argnames=("grid_size",))
+def gather_cic(grid: Array, query: Array, lo: Array, spacing: Array,
+               grid_size: int) -> Array:
+    """Multilinear (CIC-adjoint) interpolation of `grid` at the queries."""
+    d = query.shape[1]
+    base, frac = cic_prep(query, lo, spacing, grid_size)
+    out = jnp.zeros(query.shape[0], dtype=grid.dtype)
     for corner in range(2 ** d):
-        offs = jnp.array([(corner >> k) & 1 for k in range(d)], dtype=jnp.int32)
+        offs = jnp.array([(corner >> k) & 1 for k in range(d)],
+                         dtype=jnp.int32)
         idx = base + offs[None, :]
         w = jnp.prod(jnp.where(offs[None, :] == 1, frac, 1.0 - frac), axis=1)
-        grid = grid.at[tuple(idx[:, k] for k in range(d))].add(w)
-    return grid
+        out = out + w * grid[tuple(idx[:, k] for k in range(d))]
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("grid_size", "d"))
@@ -90,33 +169,48 @@ def _fft_smooth(grid: Array, spacing: Array, h: Array, grid_size: int, d: int) -
     return out[tuple(slice(0, grid_size) for _ in range(d))]
 
 
+def binned_bounds(query: Array, data: Array, h: Array) -> tuple[Array, Array]:
+    """Grid bounds with +-4h margins (shared by local and sharded paths)."""
+    lo = jnp.minimum(jnp.min(data, axis=0), jnp.min(query, axis=0)) - 4.0 * h
+    hi = jnp.maximum(jnp.max(data, axis=0), jnp.max(query, axis=0)) + 4.0 * h
+    return lo, hi
+
+
 def kde_binned(
     query: Array,
     data: Array,
     h: float | Array,
     grid_size: int = 256,
+    *,
+    backend: str | None = None,
+    tile: int | None = None,
+    interpret: bool | None = None,
 ) -> Array:
-    """Linear-time binned Gaussian KDE for d <= 3 (see module docstring)."""
+    """Linear-time binned Gaussian KDE for d <= 3 (see module docstring).
+
+    backend/tile/interpret configure the deposit stage only (see
+    `repro.kernels.dispatch.binned_scatter`): 'pallas' runs the tiled VMEM
+    scatter kernel, 'xla' (CPU/GPU default) the windowed streaming scatter
+    with `tile` rows per scan step.
+    """
     n, d = data.shape
     if d > 3:
         raise ValueError("kde_binned supports d <= 3; use kde_direct / Pallas kde")
     h = jnp.asarray(h, dtype=data.dtype)
-    lo = jnp.minimum(jnp.min(data, axis=0), jnp.min(query, axis=0)) - 4.0 * h
-    hi = jnp.maximum(jnp.max(data, axis=0), jnp.max(query, axis=0)) + 4.0 * h
+    lo, hi = binned_bounds(query, data, h)
     spacing = (hi - lo) / (grid_size - 1)
-    grid = _binned_grid(data, lo, spacing, grid_size, d)
+    from repro.kernels import dispatch  # deferred: core -> kernels at call time
+    grid = dispatch.binned_scatter(data, lo, spacing, grid_size,
+                                   backend=backend, tile=tile,
+                                   interpret=interpret)
     smooth = _fft_smooth(grid, spacing, h, grid_size, d)
-    # Multilinear gather at the query points.
-    pos = (query - lo[None, :]) / spacing[None, :]
-    base = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, grid_size - 2)
-    frac = pos - base
-    out = jnp.zeros(query.shape[0], dtype=data.dtype)
-    for corner in range(2 ** d):
-        offs = jnp.array([(corner >> k) & 1 for k in range(d)], dtype=jnp.int32)
-        idx = base + offs[None, :]
-        w = jnp.prod(jnp.where(offs[None, :] == 1, frac, 1.0 - frac), axis=1)
-        out = out + w * smooth[tuple(idx[:, k] for k in range(d))]
+    out = gather_cic(smooth, query, lo, spacing, grid_size)
     return jnp.maximum(out, 0.0) / (n * gaussian_norm(d, h))
+
+
+def default_grid_size(d: int) -> int:
+    """Binned-KDE resolution per axis: total grid stays ~1e6 cells."""
+    return {1: 1024, 2: 512, 3: 96}.get(d, 96)
 
 
 def estimate_densities(
@@ -124,6 +218,9 @@ def estimate_densities(
     h: float | Array | None = None,
     method: str = "auto",
     grid_size: int | None = None,
+    *,
+    backend: str | None = None,
+    tile: int | None = None,
 ) -> Array:
     """Self-density p_hat(x_i) for all sample points (leave-self-in, as KDE).
 
@@ -133,16 +230,18 @@ def estimate_densities(
     bandwidths are several bins wide at these resolutions (verified in
     tests/test_kde.py), so accuracy is unchanged while the d=3 FFT drops from
     256^3 = 16.8M cells to < 1M.
+    backend/tile: deposit-stage execution knobs (binned path only).
     """
     if h is None:
         h = scott_bandwidth(x)
     d = x.shape[1]
     if grid_size is None:
-        grid_size = {1: 1024, 2: 512, 3: 96}.get(d, 96)
+        grid_size = default_grid_size(d)
     if method == "auto":
         method = "binned" if d <= 3 else "direct"
     if method == "binned":
-        return kde_binned(x, x, h, grid_size=grid_size)
+        return kde_binned(x, x, h, grid_size=grid_size, backend=backend,
+                          tile=tile)
     if method == "direct":
         return kde_direct(x, x, h)
     raise ValueError(f"unknown KDE method {method!r}")

@@ -49,7 +49,9 @@ def _require_sentinel_safe(kernel: Kernel) -> None:
     """
     try:
         ok = sentinel_is_safe(kernel)
-    except jax.errors.TracerArrayConversionError:
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        # array-conversion and float()-on-tracer raise different types
         return
     if not ok:
         raise ValueError(
@@ -253,17 +255,42 @@ def fit_streaming(
 def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
                       *, tile: int = 8192,
                       backend: str | None = None) -> Array:
-    """Batched predict: O(tile * m) memory, any n_new."""
+    """Batched predict: O(tile * m) memory, any n_new.
+
+    Mesh-aware like the solve: under an active `repro.distributed.sharding`
+    mesh whose "rows" rule maps to a mesh axis that divides n_new, each
+    device predicts its local row slab against the replicated landmarks and
+    beta (no collective — predict is embarrassingly row-parallel).
+    Otherwise this is exactly the single-device batched predict.
+    """
+    from repro.distributed import sharding as shd
     from repro.kernels import dispatch
 
     _require_sentinel_safe(kernel)
     n, d = x_new.shape
-    tile = min(tile, n)
-    np_ = round_up(n, tile)
-    tiles = pad_rows_sentinel(x_new, np_).reshape(np_ // tile, tile, d)
 
-    def one(xt):
-        return dispatch.kernel_matrix(kernel, xt, fit_.landmarks,
-                                      backend=backend) @ fit_.beta
+    def local(x_loc, xm, beta):
+        n_loc = x_loc.shape[0]
+        t = min(tile, n_loc)
+        np_ = round_up(n_loc, t)
+        tiles = pad_rows_sentinel(x_loc, np_).reshape(np_ // t, t, d)
 
-    return jax.lax.map(one, tiles).reshape(np_)[:n]
+        def one(xt):
+            return dispatch.kernel_matrix(kernel, xt, xm,
+                                          backend=backend) @ beta
+
+        return jax.lax.map(one, tiles).reshape(np_)[:n_loc]
+
+    act = shd.active()
+    if act is not None:
+        row_axes = act.spec(("rows", None), x_new.shape)[0]
+        if row_axes is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            return shard_map(
+                local, mesh=act.mesh,
+                in_specs=(P(row_axes, None), P(None, None), P(None)),
+                out_specs=P(row_axes),
+            )(x_new, fit_.landmarks, fit_.beta)
+    return local(x_new, fit_.landmarks, fit_.beta)

@@ -34,6 +34,25 @@ def sample_without_replacement(key: jax.Array, probs: Array, m: int) -> Array:
     return jax.lax.top_k(logits + gumbel, m)[1]
 
 
+def sample_weighted_without_replacement(
+        key: jax.Array, probs: Array, m: int) -> tuple[Array, Array]:
+    """Gumbel top-k landmarks + importance weights 1/sqrt(m q_i).
+
+    With-replacement sampling at m >= 1024 wastes budget on duplicate
+    landmarks whose K_mm null directions the solver truncates; Gumbel top-k
+    spends every slot on a distinct point.  The returned weights are the
+    usual importance correction (normalized to mean 1 for scale stability).
+    The subset-of-regressors Nystrom solve is invariant to positive column
+    rescaling, so the weights do not enter `nystrom.fit_streaming`; they are
+    recorded for estimators that are not (projection/RLS variants) and for
+    diagnostics.  Requires m <= len(probs).
+    """
+    idx = sample_without_replacement(key, probs, m)
+    q = jnp.maximum(probs[idx], 1e-38)
+    w = 1.0 / jnp.sqrt(m * q)
+    return idx, w / jnp.mean(w)
+
+
 def bernoulli_subset(key: jax.Array, inclusion: Array):
     """Independent Bernoulli inclusion (used by Recursive-RLS / BLESS).
 

@@ -7,6 +7,7 @@ validated in interpret mode on CPU (tests/test_pallas_*.py).
   pairwise        — tiled stationary-kernel (Gram) matrix      [paper hot spot]
   gram            — fused kernel-tile + K_nm^T K_nm accumulate [streaming solve]
   kde             — tiled direct Gaussian KDE                  [paper hot spot]
+  kde_binned      — tiled CIC scatter, VMEM-resident grid      [binned KDE deposit]
   flash_attention — causal GQA flash attention (+ SWA)         [LM prefill]
   ssd             — Mamba2 SSD chunked scan                    [SSM mixing]
 

@@ -68,3 +68,25 @@ def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
         return gram_ops.gram_matrix(kernel, x, y, w, interpret=interpret, **kw)
     from repro.core import nystrom
     return nystrom.scan_normal_eq(kernel, x, y, w, tile=tile)
+
+
+def binned_scatter(data: Array, lo: Array, spacing: Array, grid_size: int,
+                   *, backend: str | None = None, weights: Array | None = None,
+                   tile: int | None = None,
+                   interpret: bool | None = None) -> Array:
+    """Cloud-in-cell deposit onto a (grid_size,)^d grid, resolved backend.
+
+    The deposit stage of the binned KDE (`repro.core.kde.kde_binned`).  The
+    Pallas path (`repro.kernels.kde_binned`) keeps the grid VMEM-resident
+    and streams row tiles through it; the XLA path is the windowed
+    scatter-add in `repro.core.kde.scatter_cic` (one update per point, a
+    lax.scan over `tile`-row slabs).  Both match the corner-loop oracle
+    `repro.kernels.kde_binned.ref.binned_grid` to reduction-order tolerance.
+    """
+    if resolve(backend) == "pallas":
+        from repro.kernels.kde_binned import ops as kb_ops
+        return kb_ops.binned_scatter(data, lo, spacing, grid_size,
+                                     weights=weights, interpret=interpret)
+    from repro.core import kde as core_kde
+    return core_kde.scatter_cic(data, lo, spacing, grid_size,
+                                weights=weights, tile=tile)

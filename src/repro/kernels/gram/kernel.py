@@ -10,9 +10,13 @@ the MXU rank-bm update of the Gram block:
     (the canonical Pallas accumulation pattern: init at i == 0, += after);
   * per step, two (bm, bn) kernel tiles kj = k(X_i, Y_j), kk = k(X_i, Y_k)
     are built in VMEM from the MXU cross term and fused element-wise map —
-    they die in registers/VMEM, never visiting HBM;
-  * the rhs accumulator rides along gated on k == 0 (its block index depends
-    on j only, so it would be multi-counted otherwise);
+    they die in registers/VMEM, never visiting HBM.  On the diagonal
+    (j == k) the two tiles are identical, so kk is only evaluated off it
+    (lax.cond), saving m/bn kernel-map evaluations per row tile;
+  * the rhs accumulator rides along as a diagonal epilogue, gated on j == k
+    (its block index depends on j only and each j hits the diagonal exactly
+    once per row tile, so it is never multi-counted) — the gate reuses the
+    tile the diagonal already has instead of spending the k == 0 pass on it;
   * VMEM per program at d=128, bm=bn=256: x (bm, d) + 2 y-tiles (bn, d)
     + 2 kernel tiles (bm, bn) + G block (bn, bn) fp32 ~= 1.1 MB — far under
     budget, so the row stream double-buffers.
@@ -70,8 +74,9 @@ def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *, kind: str,
     yk = yk_ref[...].astype(acc)  # (bn, d) landmark tile k
     tile = functools.partial(_kernel_tile, kind=kind, nu=nu, a=a,
                              inv_two_sigma_sq=inv_two_sigma_sq)
+    j = pl.program_id(0)
     kj = tile(x, yj)                      # (bm, bn)
-    kk = tile(x, yk)
+    kk = jax.lax.cond(j == k, lambda: kj, lambda: tile(x, yk))
 
     @pl.when(i == 0)
     def _():
@@ -85,7 +90,7 @@ def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *, kind: str,
     def _():
         r_ref[...] = jnp.zeros_like(r_ref)
 
-    @pl.when(k == 0)
+    @pl.when(j == k)
     def _():
         w = w_ref[...].astype(acc)     # (bm, 1)
         r_ref[...] += jax.lax.dot_general(

@@ -8,14 +8,11 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.kernels import round_up
 from repro.kernels.kde import kernel as kk
 from repro.kernels.kde import ref
 
 Array = jax.Array
-
-
-def _round_up(v: int, b: int) -> int:
-    return -(-v // b) * b
 
 
 @functools.partial(
@@ -41,10 +38,10 @@ def kde(
         interpret = jax.default_backend() != "tpu"
     n, d = query.shape
     m, _ = data.shape
-    bm_ = min(bm, _round_up(n, 8))
-    bn_ = min(bn, _round_up(m, 128))
-    np_, mp = _round_up(n, bm_), _round_up(m, bn_)
-    dp = _round_up(d, 128) if not interpret else d
+    bm_ = min(bm, round_up(n, 8))
+    bn_ = min(bn, round_up(m, 128))
+    np_, mp = round_up(n, bm_), round_up(m, bn_)
+    dp = round_up(d, 128) if not interpret else d
     q = jnp.pad(query, ((0, np_ - n), (0, dp - d)))
     x = jnp.pad(data, ((0, mp - m), (0, dp - d)))
     sums = kk.kde_padded(q, x, h=h, m=m, bm=bm_, bn=bn_, interpret=interpret)

@@ -1,0 +1,7 @@
+"""kde_binned Pallas kernel package (kernel.py + ops.py + ref.py).
+
+Tiled cloud-in-cell scatter-add onto a regular d <= 3 grid — the deposit
+stage of the binned (FFT) KDE.  The grid lives VMEM-resident across the row
+stream; `repro.kernels.dispatch.binned_scatter` routes between this kernel
+and the windowed-scatter XLA path in `repro.core.kde`.
+"""

@@ -1,0 +1,92 @@
+"""jit'd public wrapper for the binned-KDE scatter Pallas kernel.
+
+Precomputes the vectorizable parts of the cloud-in-cell deposit — all O(n)
+arrays, keeping the streaming-memory contract (the Pallas body builds each
+point's 2-nonzero lane row itself and is otherwise a pure scatter, see
+kernel.py):
+
+  * `rows`  — per point, the 2^(d-1) flattened sublane row indices of the
+    stencil corners over the leading d-1 lattice axes;
+  * `cw`    — the matching product-of-(1-f, f) corner weights, scaled by
+    the optional point weight (zeroed on padded rows, so no masking is
+    needed in the kernel);
+  * `blast` / `flast` — the last-axis base lane + fraction the body's iota
+    compare expands into the lane deposit row.
+
+Rows are padded to bm multiples; lane padding (g -> 128-multiples on TPU)
+is sliced off before the (g,)^d reshape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import round_up
+from repro.kernels.kde_binned import kernel as kk
+from repro.kernels.kde_binned import ref
+
+Array = jax.Array
+
+
+@functools.partial(
+    jax.jit, static_argnames=("grid_size", "bm", "interpret", "use_pallas")
+)
+def binned_scatter(
+    data: Array,
+    lo: Array,
+    spacing: Array,
+    grid_size: int,
+    *,
+    weights: Array | None = None,
+    bm: int = 256,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> Array:
+    """(n, d) points -> (grid_size,)^d CIC mass grid (Pallas path).
+
+    Matches `ref.binned_grid` / `repro.core.kde.scatter_cic` to fp32
+    reduction-order tolerance.  use_pallas=False falls back to the corner-
+    loop oracle; interpret=None resolves to True off-TPU.
+    """
+    n, d = data.shape
+    if not 1 <= d <= 3:
+        raise ValueError(f"binned_scatter supports 1 <= d <= 3, got d={d}")
+    if not use_pallas:
+        return ref.binned_grid(data, lo, spacing, grid_size, weights=weights)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    g = grid_size
+    base, frac = ref.cic_prep(data, lo, spacing, g)
+
+    # Sublane rows + corner weights over the leading d-1 lattice axes.
+    n_sub = 2 ** (d - 1)
+    rows = jnp.zeros((n, n_sub), dtype=jnp.int32)
+    cw = jnp.ones((n, n_sub), dtype=jnp.float32)
+    for c in range(n_sub):
+        r = jnp.zeros((n,), dtype=jnp.int32)
+        w = (jnp.ones((n,), dtype=jnp.float32) if weights is None
+             else weights.astype(jnp.float32))
+        for k in range(d - 1):
+            o = (c >> k) & 1
+            r = r * g + base[:, k] + o
+            w = w * (frac[:, k] if o else 1.0 - frac[:, k])
+        rows = rows.at[:, c].set(r)
+        cw = cw.at[:, c].set(w)
+
+    # Last-axis base lane + fraction (the body expands these to lane rows).
+    cp = round_up(g, 128) if not interpret else g
+    blast = base[:, d - 1][:, None]
+    flast = frac[:, d - 1][:, None].astype(jnp.float32)
+
+    bm_ = min(bm, round_up(n, 8))
+    np_ = round_up(n, bm_)
+    pad = ((0, np_ - n), (0, 0))
+    grid2d = kk.scatter_padded(
+        jnp.pad(rows, pad), jnp.pad(cw, pad), jnp.pad(blast, pad),
+        jnp.pad(flast, pad),
+        rows_dim=g ** (d - 1), lanes_dim=cp, bm=bm_, interpret=interpret,
+    )
+    return grid2d[:, :g].reshape((g,) * d).astype(data.dtype)

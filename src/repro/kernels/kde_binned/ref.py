@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the binned-KDE scatter kernel.
+
+Cloud-in-cell (multilinear) deposit of n weighted points onto a regular
+(grid_size,)^d lattice: each point spreads its mass over the 2^d corners of
+its cell with product-of-(1-f, f) weights.  This is the historical one-shot
+corner-loop formulation (one scatter-add per corner) — O(n 2^d) updates,
+dense in the grid; it exists to validate the Pallas kernel and the windowed
+streaming path in `repro.core.kde.scatter_cic`, which compute the same sums
+tile by tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# One shared lattice-coordinate rule: the Pallas path must bin points
+# exactly like the XLA deposit or the parity tests validate nothing.
+from repro.core.kde import cic_prep, gather_cic
+
+Array = jax.Array
+
+
+def binned_grid(points: Array, lo: Array, spacing: Array, grid_size: int,
+                weights: Array | None = None) -> Array:
+    """Corner-loop CIC deposit (oracle): one dense scatter-add per corner."""
+    n, d = points.shape
+    base, frac = cic_prep(points, lo, spacing, grid_size)
+    grid = jnp.zeros((grid_size,) * d, dtype=points.dtype)
+    for corner in range(2 ** d):
+        offs = jnp.array([(corner >> k) & 1 for k in range(d)],
+                         dtype=jnp.int32)
+        idx = base + offs[None, :]
+        w = jnp.prod(jnp.where(offs[None, :] == 1, frac, 1.0 - frac), axis=1)
+        if weights is not None:
+            w = w * weights
+        grid = grid.at[tuple(idx[:, k] for k in range(d))].add(w)
+    return grid
+
+
+def gather(grid: Array, query: Array, lo: Array, spacing: Array,
+           grid_size: int) -> Array:
+    """Multilinear (CIC-adjoint) interpolation of `grid` at the query points."""
+    return gather_cic(grid, query, lo, spacing, grid_size)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kernels as core_kernels
+from repro.core.kernels import round_up
 from repro.kernels.pairwise import kernel as pk
 from repro.kernels.pairwise import ref
 
@@ -24,10 +25,6 @@ def _pad_to(x: Array, rows: int, cols: int) -> Array:
     if pr == 0 and pc == 0:
         return x
     return jnp.pad(x, ((0, pr), (0, pc)))
-
-
-def _round_up(v: int, b: int) -> int:
-    return -(-v // b) * b
 
 
 def kernel_params(kernel: core_kernels.Kernel) -> dict:
@@ -71,10 +68,10 @@ def pairwise(
         interpret = jax.default_backend() != "tpu"
     n, d = x.shape
     m, _ = y.shape
-    bm_ = min(bm, _round_up(n, 8))
-    bn_ = min(bn, _round_up(m, 128))
-    np_, mp = _round_up(n, bm_), _round_up(m, bn_)
-    dp = _round_up(d, 128) if not interpret else d  # zero-pad features: distances unchanged
+    bm_ = min(bm, round_up(n, 8))
+    bn_ = min(bn, round_up(m, 128))
+    np_, mp = round_up(n, bm_), round_up(m, bn_)
+    dp = round_up(d, 128) if not interpret else d  # zero-pad features: distances unchanged
     out = pk.pairwise_padded(
         _pad_to(x, np_, dp), _pad_to(y, mp, dp),
         kind=kind, nu=nu, a=a, sigma=sigma, bm=bm_, bn=bn_,

@@ -13,3 +13,16 @@ from repro.pipeline.api import (  # noqa: F401
     PipelineState,
     SAKRRPipeline,
 )
+from repro.pipeline.stages import (  # noqa: F401
+    DensityStage,
+    FixedLandmarkStage,
+    LeverageStage,
+    PrecomputedDensityStage,
+    SampleStage,
+    SolveStage,
+    Stage,
+    StageContext,
+    StageError,
+    default_stages,
+    run_stages,
+)

@@ -4,36 +4,44 @@ sampling → streaming Nyström solve → batched predict.
 This is the deployment surface of the paper: every stage is Õ(n) time and
 O(tile · m) memory, so a single CPU fits n = 10^6 and a mesh shards rows
 over the "rows" logical axis (mesh axis "data") with one psum for the
-normal equations — activate a mesh with `repro.distributed.sharding` and
-the same `fit` call runs sharded, no code change.
+normal equations and one for the KDE grid — activate a mesh with
+`repro.distributed.sharding` and the same `fit` call runs sharded, no code
+change.
 
-Stages (all overridable through `PipelineConfig`):
+`fit` is a fold over `repro.pipeline.stages` stage objects (see that module
+and pipeline/README.md for the stage contract and how to compose custom
+workloads — precomputed densities, fixed landmarks, KDE-only benchmarking):
 
-  1. density   — `repro.core.kde.estimate_densities` (binned FFT KDE for
-                 d <= 3, O(n); direct tiled KDE otherwise);
-  2. leverage  — `repro.core.leverage.sa_leverage` (Eq. 6 closed form /
-                 grid / quadrature), elementwise in the densities;
-  3. sampling  — m landmarks iid ~ q (paper Thm 2, with replacement);
-  4. solve     — `repro.core.nystrom.fit_streaming`: G = K_nm^T K_nm and
-                 rhs = K_nm^T y accumulated over row tiles (lax.scan on the
-                 XLA backend, the fused Pallas `gram` kernel on TPU) — the
-                 (n, m) cross-kernel matrix is never materialized;
-  5. predict   — `nystrom.predict_streaming`, O(tile · m) per batch.
+  1. kde       — `stages.DensityStage`: binned FFT KDE for d <= 3 (windowed
+                 streaming CIC scatter on XLA, the Pallas `kde_binned`
+                 kernel on TPU, `kde_binned_sharded` under a mesh); direct
+                 tiled KDE otherwise;
+  2. leverage  — `stages.LeverageStage`: Eq. 6 closed form / grid /
+                 quadrature, elementwise in the densities;
+  3. sample    — `stages.SampleStage`: Gumbel top-k without replacement +
+                 importance weights by default; iid with replacement (paper
+                 Thm 2) behind `sample_with_replacement=True`;
+  4. solve     — `stages.SolveStage` -> `nystrom.fit_streaming`: G =
+                 K_nm^T K_nm and rhs = K_nm^T y accumulated over row tiles
+                 (lax.scan on XLA, the fused Pallas `gram` kernel on TPU) —
+                 the (n, m) cross-kernel matrix is never materialized;
+  5. predict   — `nystrom.predict_streaming`, O(tile · m) per batch, row-
+                 sharded under a mesh.
 
-`fit` records per-stage wall-clock seconds in `state.seconds` so benchmarks
-(benchmarks/bench_pipeline.py) get the trajectory for free.
+Each stage records its wall-clock seconds in `state.seconds`, so benchmarks
+(benchmarks/bench_pipeline.py, incl. `--stages kde` subsets) get the
+trajectory for free.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any
+from typing import Any, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import kde, kernels, leverage, nystrom, sampling
+from repro.core import kernels, leverage, nystrom
+from repro.pipeline import stages as stages_mod
 
 Array = jax.Array
 
@@ -59,7 +67,10 @@ class PipelineConfig:
     leverage_method: str = "closed_form"   # closed_form | grid | quadrature
     kde_method: str = "auto"               # auto | binned | direct
     kde_grid_size: int | None = None
+    kde_tile: int | None = None            # rows per streaming scatter slab
     density_floor: float | None = None
+    # sampling
+    sample_with_replacement: bool = False  # paper Thm 2 iid mode when True
     # execution
     tile: int = 8192                  # rows per streaming slab
     backend: str = "auto"             # auto | xla | pallas (dispatch.resolve)
@@ -90,72 +101,73 @@ class PipelineConfig:
 
 @dataclasses.dataclass
 class PipelineState:
-    """Everything `fit` produced (arrays are O(n) or O(m), never O(n·m))."""
+    """Everything `fit` produced (arrays are O(n) or O(m), never O(n·m)).
+
+    Fields past `num_landmarks` are Optional because a partial stage list
+    (e.g. bench --stages kde) legitimately stops before producing them.
+    """
 
     n: int
     d: int
     lam: float
     num_landmarks: int
-    densities: Array          # (n,)
-    leverage: leverage.SALeverage
-    fit: nystrom.NystromFit
-    seconds: dict[str, float]  # per-stage wall clock
+    densities: Optional[Array]              # (n,)
+    leverage: Optional[leverage.SALeverage]
+    fit: Optional[nystrom.NystromFit]
+    seconds: dict[str, float]               # per-stage wall clock
+    sample_weights: Optional[Array] = None  # (m,) Gumbel top-k importance wts
 
 
 class SAKRRPipeline:
-    """sklearn-shaped estimator over the streaming SA→Nyström stack."""
+    """sklearn-shaped estimator over the streaming SA→Nyström stack.
 
-    def __init__(self, config: PipelineConfig | None = None):
+    `stages` overrides the default KDE→leverage→sample→solve composition —
+    pass any sequence of `repro.pipeline.stages.Stage` objects (e.g. swap in
+    `PrecomputedDensityStage` / `FixedLandmarkStage`, or reconfigure a
+    single stage's backend/tile) and `fit` folds the context through them.
+    """
+
+    def __init__(self, config: PipelineConfig | None = None,
+                 stages: Sequence[stages_mod.Stage] | None = None):
         self.config = config or PipelineConfig()
         self.kernel = self.config.build_kernel()
+        self.stages = (list(stages) if stages is not None
+                       else stages_mod.default_stages(self.config))
         self.state: PipelineState | None = None
 
     # ------------------------------------------------------------------ fit --
     def fit(self, x: Array, y: Array) -> "SAKRRPipeline":
         cfg = self.config
         n, d = x.shape
-        lam = cfg.resolve_lam(n)
-        m = cfg.resolve_num_landmarks(n)
-        seconds: dict[str, float] = {}
-
-        t0 = time.perf_counter()
-        dens = kde.estimate_densities(x, method=cfg.kde_method,
-                                      grid_size=cfg.kde_grid_size)
-        dens = jax.block_until_ready(dens)
-        seconds["kde"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        sa = leverage.sa_leverage(dens, lam, self.kernel, d, n=n,
-                                  method=cfg.leverage_method,
-                                  floor=cfg.density_floor)
-        jax.block_until_ready(sa.probs)
-        seconds["leverage"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        idx = sampling.sample_with_replacement(
-            jax.random.PRNGKey(cfg.seed), sa.probs, m)
-        idx = jax.block_until_ready(idx)
-        seconds["sample"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        fit_ = nystrom.fit_streaming(self.kernel, x, y, lam, idx,
-                                     tile=cfg.tile, backend=_backend(cfg),
-                                     jitter=cfg.jitter)
-        jax.block_until_ready(fit_.beta)
-        seconds["solve"] = time.perf_counter() - t0
-
-        self.state = PipelineState(n=n, d=d, lam=lam, num_landmarks=m,
-                                   densities=dens, leverage=sa, fit=fit_,
-                                   seconds=seconds)
+        ctx = stages_mod.StageContext(
+            config=cfg, kernel=self.kernel, x=x, y=y, n=n, d=d,
+            lam=cfg.resolve_lam(n),
+            num_landmarks=cfg.resolve_num_landmarks(n))
+        stages_mod.run_stages(self.stages, ctx)
+        self.state = PipelineState(
+            n=n, d=d, lam=ctx.lam, num_landmarks=ctx.num_landmarks,
+            densities=ctx.densities, leverage=ctx.leverage, fit=ctx.fit,
+            seconds=ctx.seconds, sample_weights=ctx.sample_weights)
         return self
 
     # -------------------------------------------------------------- predict --
     def predict(self, x_new: Array, tile: int | None = None) -> Array:
         st = self._fitted_state()
-        return nystrom.predict_streaming(
-            self.kernel, st.fit, x_new,
-            tile=tile if tile is not None else self.config.tile,
-            backend=_backend(self.config))
+        if st.fit is None:
+            raise RuntimeError("the fitted stage list produced no solve; "
+                               "include a SolveStage to predict")
+        # honor the SolveStage's per-stage overrides so fit and predict run
+        # the same backend/tile unless the caller says otherwise
+        solve = next((s for s in self.stages
+                      if isinstance(s, stages_mod.SolveStage)), None)
+        backend = (solve.backend if solve is not None and
+                   solve.backend is not None
+                   else stages_mod.resolve_backend(self.config))
+        if tile is None:
+            tile = (solve.tile if solve is not None and solve.tile is not None
+                    else self.config.tile)
+        return nystrom.predict_streaming(self.kernel, st.fit, x_new,
+                                         tile=tile, backend=backend)
 
     def fitted(self, x_train: Array) -> Array:
         """In-sample predictions (the paper's R_n functional)."""
@@ -169,12 +181,12 @@ class SAKRRPipeline:
 
     @property
     def d_stat(self) -> float:
-        return float(self._fitted_state().leverage.d_stat)
+        lev = self._fitted_state().leverage
+        if lev is None:
+            raise RuntimeError("the fitted stage list produced no leverage "
+                               "scores; include a LeverageStage for d_stat")
+        return float(lev.d_stat)
 
     @property
     def seconds(self) -> dict[str, float]:
         return dict(self._fitted_state().seconds)
-
-
-def _backend(cfg: PipelineConfig) -> str | None:
-    return None if cfg.backend == "auto" else cfg.backend

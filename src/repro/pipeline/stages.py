@@ -1,0 +1,269 @@
+"""Composable pipeline stages: KDE, leverage, sampling, solve as uniform
+stage objects.
+
+`SAKRRPipeline.fit` is a fold over a list of stages.  Each stage reads and
+writes named artifacts on a shared `StageContext` (densities -> leverage ->
+landmark_idx -> fit), declares what it `requires`/`provides`, and records
+its own wall-clock seconds — so benchmarks get per-stage timing for free
+and new workloads compose instead of forking the pipeline class:
+
+  * precomputed densities:  [PrecomputedDensityStage(p), LeverageStage(),
+                             SampleStage(), SolveStage()]
+  * fixed landmarks:        [FixedLandmarkStage(idx), SolveStage()]
+  * KDE-only benchmarking:  [DensityStage()]          (bench --stages kde)
+
+Per-stage execution config (backend / tile / sharding) is a constructor
+argument on the stage, overriding the pipeline-wide `PipelineConfig`
+defaults; `REPRO_KERNEL_BACKEND` still overrides 'auto' resolution inside
+`repro.kernels.dispatch` for every stage.
+
+Sharding: stages are mesh-aware through `repro.distributed.sharding`.
+Under an active mesh, DensityStage routes the binned KDE through
+`core.distributed.kde_binned_sharded` (rows scattered locally, one grid
+psum) and SolveStage's `nystrom.fit_streaming` shards the normal-equation
+row stream; with no mesh both run single-device, same numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kde, kernels, leverage, nystrom, sampling
+
+Array = jax.Array
+
+
+class StageError(RuntimeError):
+    """A stage was run before its required artifacts existed."""
+
+
+@dataclasses.dataclass
+class StageContext:
+    """Shared state the stages fold over (arrays are O(n) or O(m))."""
+
+    config: Any                   # PipelineConfig (untyped: avoid the cycle)
+    kernel: kernels.Kernel
+    x: Array
+    y: Array
+    n: int
+    d: int
+    lam: float
+    num_landmarks: int
+    densities: Optional[Array] = None
+    leverage: Optional[leverage.SALeverage] = None
+    landmark_idx: Optional[Array] = None
+    sample_weights: Optional[Array] = None
+    fit: Optional[nystrom.NystromFit] = None
+    seconds: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def require(self, *names: str) -> None:
+        missing = [a for a in names if getattr(self, a) is None]
+        if missing:
+            raise StageError(
+                f"missing artifacts {missing}; run the providing stage(s) "
+                "first (e.g. DensityStage before LeverageStage)")
+
+
+class Stage:
+    """Base class: `run(ctx)` produces artifacts; `__call__` times it.
+
+    Subclasses set `name` (the `seconds` key), `requires`/`provides`
+    (artifact names on StageContext), and may take per-stage overrides
+    (backend, tile, ...) in their constructor.
+    """
+
+    name: str = "stage"
+    requires: tuple[str, ...] = ()
+    provides: tuple[str, ...] = ()
+
+    def run(self, ctx: StageContext) -> None:
+        raise NotImplementedError
+
+    def __call__(self, ctx: StageContext) -> StageContext:
+        ctx.require(*self.requires)
+        t0 = time.perf_counter()
+        self.run(ctx)
+        for name in self.provides:   # block so seconds mean what they say
+            art = getattr(ctx, name)
+            if art is not None:
+                jax.block_until_ready(jax.tree.leaves(art))
+        ctx.seconds[self.name] = time.perf_counter() - t0
+        return ctx
+
+
+def _resolve_kde_method(method: str, d: int) -> str:
+    return ("binned" if d <= 3 else "direct") if method == "auto" else method
+
+
+class DensityStage(Stage):
+    """p_hat(x_i) via binned (d <= 3) or direct KDE; mesh-aware.
+
+    Under an active `repro.distributed.sharding` mesh the binned path runs
+    `core.distributed.kde_binned_sharded` on grid bounds computed from the
+    global data (so it matches the single-device `kde.kde_binned` grid
+    exactly); otherwise `kde.estimate_densities`.  `backend`/`tile` override
+    the config-wide deposit-stage knobs; `sharded=False` forces the
+    single-device path even under a mesh.
+    """
+
+    name = "kde"
+    provides = ("densities",)
+
+    def __init__(self, *, method: str | None = None,
+                 grid_size: int | None = None, backend: str | None = None,
+                 tile: int | None = None, sharded: bool | None = None):
+        self.method = method
+        self.grid_size = grid_size
+        self.backend = backend
+        self.tile = tile
+        self.sharded = sharded
+
+    def run(self, ctx: StageContext) -> None:
+        from repro.distributed import sharding as shd
+
+        cfg = ctx.config
+        method = _resolve_kde_method(self.method or cfg.kde_method, ctx.d)
+        grid_size = (self.grid_size or cfg.kde_grid_size
+                     or kde.default_grid_size(ctx.d))
+        backend = self.backend if self.backend is not None else _backend(cfg)
+        tile = self.tile if self.tile is not None else cfg.kde_tile
+        act = shd.active()
+        use_sharded = (self.sharded if self.sharded is not None
+                       else act is not None)
+        if method == "binned" and use_sharded and act is not None:
+            from repro.core import distributed as dist
+            h = jnp.asarray(kde.scott_bandwidth(ctx.x), ctx.x.dtype)
+            lo, hi = kde.binned_bounds(ctx.x, ctx.x, h)
+            ctx.densities = dist.kde_binned_sharded(
+                ctx.x, h, grid_size=grid_size, lo=lo, hi=hi, tile=tile,
+                backend=backend)
+        else:
+            ctx.densities = kde.estimate_densities(
+                ctx.x, method=method, grid_size=grid_size, backend=backend,
+                tile=tile)
+
+
+class PrecomputedDensityStage(Stage):
+    """Drop-in density source for workloads that already know p(x_i)."""
+
+    name = "kde"
+    provides = ("densities",)
+
+    def __init__(self, densities: Array):
+        self.densities = densities
+
+    def run(self, ctx: StageContext) -> None:
+        if self.densities.shape != (ctx.n,):
+            raise ValueError(
+                f"precomputed densities have shape {self.densities.shape}, "
+                f"expected ({ctx.n},)")
+        ctx.densities = jnp.asarray(self.densities)
+
+
+class LeverageStage(Stage):
+    """SA leverage scores (paper Eq. 6) from the densities, elementwise."""
+
+    name = "leverage"
+    requires = ("densities",)
+    provides = ("leverage",)
+
+    def __init__(self, *, method: str | None = None):
+        self.method = method
+
+    def run(self, ctx: StageContext) -> None:
+        cfg = ctx.config
+        ctx.leverage = leverage.sa_leverage(
+            ctx.densities, ctx.lam, ctx.kernel, ctx.d, n=ctx.n,
+            method=self.method or cfg.leverage_method,
+            floor=cfg.density_floor)
+
+
+class SampleStage(Stage):
+    """m landmarks ~ q: Gumbel top-k without replacement by default
+    (distinct landmarks + importance weights), iid with replacement (paper
+    Thm 2 setting) behind `config.sample_with_replacement`."""
+
+    name = "sample"
+    requires = ("leverage",)
+    provides = ("landmark_idx",)
+
+    def __init__(self, *, with_replacement: bool | None = None):
+        self.with_replacement = with_replacement
+
+    def run(self, ctx: StageContext) -> None:
+        cfg = ctx.config
+        key = jax.random.PRNGKey(cfg.seed)
+        probs = ctx.leverage.probs
+        with_rep = (self.with_replacement if self.with_replacement is not None
+                    else cfg.sample_with_replacement)
+        m = ctx.num_landmarks
+        if with_rep or m > ctx.n:   # top-k needs m distinct points to exist
+            ctx.landmark_idx = sampling.sample_with_replacement(key, probs, m)
+        else:
+            ctx.landmark_idx, ctx.sample_weights = (
+                sampling.sample_weighted_without_replacement(key, probs, m))
+
+
+class FixedLandmarkStage(Stage):
+    """Drop-in landmark source (precomputed index set; skips KDE/leverage)."""
+
+    name = "sample"
+    provides = ("landmark_idx",)
+
+    def __init__(self, landmark_idx: Array):
+        self.landmark_idx = landmark_idx
+
+    def run(self, ctx: StageContext) -> None:
+        ctx.landmark_idx = jnp.asarray(self.landmark_idx, dtype=jnp.int32)
+
+
+class SolveStage(Stage):
+    """Streaming Nystrom normal equations on the sampled landmarks
+    (lax.scan row slabs on XLA, the fused Pallas `gram` kernel on TPU;
+    rows psum-sharded under an active mesh)."""
+
+    name = "solve"
+    requires = ("landmark_idx",)
+    provides = ("fit",)
+
+    def __init__(self, *, backend: str | None = None, tile: int | None = None):
+        self.backend = backend
+        self.tile = tile
+
+    def run(self, ctx: StageContext) -> None:
+        cfg = ctx.config
+        ctx.fit = nystrom.fit_streaming(
+            ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
+            tile=self.tile if self.tile is not None else cfg.tile,
+            backend=self.backend if self.backend is not None else _backend(cfg),
+            jitter=cfg.jitter)
+
+
+def default_stages(config: Any = None) -> list[Stage]:
+    """The paper's Algorithm 1 as a stage list: KDE -> leverage -> sample ->
+    solve.  Per-stage overrides come from constructing the stages yourself."""
+    del config  # stages read the config from the context at run time
+    return [DensityStage(), LeverageStage(), SampleStage(), SolveStage()]
+
+
+def run_stages(stages: Sequence[Stage], ctx: StageContext,
+               until: str | None = None) -> StageContext:
+    """Fold ctx through stages; stop (inclusive) at stage name `until`."""
+    for stage in stages:
+        stage(ctx)
+        if until is not None and stage.name == until:
+            break
+    return ctx
+
+
+def resolve_backend(cfg: Any) -> str | None:
+    """Config backend -> dispatch arg (None lets dispatch resolve 'auto')."""
+    return None if cfg.backend == "auto" else cfg.backend
+
+
+_backend = resolve_backend   # module-internal shorthand

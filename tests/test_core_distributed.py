@@ -87,8 +87,9 @@ def test_binned_kde_sharded_matches_oracle():
         lo = jnp.full((d,), -5.0); hi = jnp.full((d,), 5.0)
 
         # oracle: single-device binned KDE on the same fixed grid bounds
+        from repro.kernels.kde_binned import ref as kb_ref
         spacing = (hi - lo) / (96 - 1)
-        grid = core_kde._binned_grid(data.x, lo, spacing, 96, d)
+        grid = kb_ref.binned_grid(data.x, lo, spacing, 96)
         smooth = core_kde._fft_smooth(grid, spacing, jnp.float32(h), 96, d)
 
         ref = D.kde_binned_sharded(data.x, h, grid_size=96, lo=lo, hi=hi)

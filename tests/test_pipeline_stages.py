@@ -1,0 +1,136 @@
+"""Stage layer: composition, artifact dependencies, drop-in stages, and the
+default-sampler switch (Gumbel top-k without replacement)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import krr, nystrom
+from repro.data import krr_data
+from repro.pipeline import (DensityStage, FixedLandmarkStage, LeverageStage,
+                            PipelineConfig, PrecomputedDensityStage,
+                            SAKRRPipeline, SampleStage, SolveStage,
+                            StageContext, StageError, default_stages,
+                            run_stages)
+
+
+def _ctx(n=1024, d=3, m=32, seed=0):
+    data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=d)
+    cfg = PipelineConfig(num_landmarks=m, tile=256)
+    return data, StageContext(config=cfg, kernel=cfg.build_kernel(),
+                              x=data.x, y=data.y, n=n, d=d,
+                              lam=cfg.resolve_lam(n), num_landmarks=m)
+
+
+def test_default_stage_list_shape_and_seconds():
+    stages = default_stages(None)
+    assert [s.name for s in stages] == ["kde", "leverage", "sample", "solve"]
+    _, ctx = _ctx()
+    run_stages(stages, ctx)
+    assert set(ctx.seconds) == {"kde", "leverage", "sample", "solve"}
+    assert all(v >= 0.0 for v in ctx.seconds.values())
+    assert ctx.fit is not None and ctx.fit.beta.shape == (32,)
+
+
+def test_stage_requires_enforced():
+    _, ctx = _ctx()
+    with pytest.raises(StageError):
+        LeverageStage()(ctx)            # no densities yet
+    with pytest.raises(StageError):
+        SolveStage()(ctx)               # no landmarks yet
+
+
+def test_run_stages_until_stops_inclusive():
+    _, ctx = _ctx()
+    run_stages(default_stages(None), ctx, until="leverage")
+    assert ctx.leverage is not None and ctx.landmark_idx is None
+    assert set(ctx.seconds) == {"kde", "leverage"}
+
+
+def test_precomputed_density_stage_drops_in():
+    """A pipeline fed the exact densities must match one that runs its own
+    KDE stage on those densities' values downstream (same leverage)."""
+    data, ctx = _ctx(seed=1)
+    run_stages([DensityStage()], ctx)
+    dens = ctx.densities
+    _, ctx2 = _ctx(seed=1)
+    run_stages([PrecomputedDensityStage(dens), LeverageStage()], ctx2)
+    _, ctx3 = _ctx(seed=1)
+    run_stages([DensityStage(), LeverageStage()], ctx3)
+    np.testing.assert_allclose(np.asarray(ctx2.leverage.probs),
+                               np.asarray(ctx3.leverage.probs), rtol=1e-6)
+    with pytest.raises(ValueError):
+        run_stages([PrecomputedDensityStage(dens[:10])], _ctx(seed=1)[1])
+
+
+def test_fixed_landmark_stage_skips_density_pipeline():
+    data, ctx = _ctx(seed=2)
+    idx = jnp.arange(0, 1024, 32)[:32]
+    run_stages([FixedLandmarkStage(idx), SolveStage()], ctx)
+    assert ctx.densities is None            # KDE never ran
+    dense = nystrom.fit_from_landmarks(ctx.kernel, data.x, data.y, ctx.lam,
+                                       idx)
+    want = np.asarray(nystrom.predict(ctx.kernel, dense, data.x[:200]))
+    got = np.asarray(nystrom.predict_streaming(ctx.kernel, ctx.fit,
+                                               data.x[:200], tile=256))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-3)
+
+
+def test_pipeline_accepts_custom_stage_list():
+    data = krr_data.bimodal(jax.random.PRNGKey(3), 1024, d=3)
+    cfg = PipelineConfig(num_landmarks=32, tile=256)
+    idx = jnp.arange(32, dtype=jnp.int32) * 7
+    pipe = SAKRRPipeline(cfg, stages=[FixedLandmarkStage(idx), SolveStage()])
+    pipe.fit(data.x, data.y)
+    assert set(pipe.seconds) == {"sample", "solve"}
+    risk = float(krr.in_sample_risk(pipe.fitted(data.x), data.f_star))
+    assert np.isfinite(risk)
+    with pytest.raises(RuntimeError):       # no leverage stage ran
+        pipe.d_stat
+
+
+def test_partial_pipeline_cannot_predict():
+    data = krr_data.bimodal(jax.random.PRNGKey(4), 512, d=3)
+    pipe = SAKRRPipeline(PipelineConfig(num_landmarks=16, tile=128),
+                         stages=[DensityStage()])
+    pipe.fit(data.x, data.y)
+    assert pipe.state.densities is not None and pipe.state.fit is None
+    with pytest.raises(RuntimeError):
+        pipe.predict(data.x[:10])
+
+
+def test_default_sampling_is_without_replacement():
+    """Gumbel top-k landmarks are distinct and carry importance weights;
+    the paper's iid mode stays behind the config flag."""
+    data = krr_data.bimodal(jax.random.PRNGKey(5), 4096, d=3)
+    cfg = PipelineConfig(num_landmarks=256, tile=1024)
+    pipe = SAKRRPipeline(cfg).fit(data.x, data.y)
+    idx = np.asarray(pipe.state.fit.landmark_idx)
+    assert len(np.unique(idx)) == 256       # distinct by construction
+    w = np.asarray(pipe.state.sample_weights)
+    assert w.shape == (256,) and np.all(w > 0)
+    assert np.mean(w) == pytest.approx(1.0, rel=1e-5)
+
+    wr = PipelineConfig(num_landmarks=256, tile=1024,
+                        sample_with_replacement=True)
+    pipe_wr = SAKRRPipeline(wr).fit(data.x, data.y)
+    assert pipe_wr.state.sample_weights is None
+    # with replacement at m=256 on concentrated SA probs: near-certain dups
+    assert len(np.unique(np.asarray(pipe_wr.state.fit.landmark_idx))) <= 256
+
+
+def test_per_stage_overrides_beat_config():
+    """Stage constructor knobs (method/tile/backend) override the config."""
+    data = krr_data.bimodal(jax.random.PRNGKey(6), 512, d=3)
+    cfg = PipelineConfig(num_landmarks=16, tile=128, kde_method="binned")
+    stages = [DensityStage(method="direct"), LeverageStage(), SampleStage(),
+              SolveStage(tile=64)]
+    pipe = SAKRRPipeline(cfg, stages=stages).fit(data.x, data.y)
+    from repro.core import kde
+    want = np.asarray(kde.kde_direct(data.x, data.x,
+                                     kde.scott_bandwidth(data.x)))
+    np.testing.assert_allclose(np.asarray(pipe.state.densities), want,
+                               rtol=1e-5, atol=1e-9)
