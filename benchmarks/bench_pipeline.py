@@ -1,17 +1,27 @@
 """Time/memory trajectory of the streaming SA→Nyström pipeline.
 
-Sweeps n (and one tile sweep at the largest n), fits `SAKRRPipeline` at each
-point, and records per-stage seconds, throughput, peak RSS, and the streaming
-slab footprint to ``BENCH_pipeline.json`` — a list of records appended across
-runs, so successive commits build a trajectory.
+Sweeps n (and one tile sweep at the largest n), runs `SAKRRPipeline.evaluate`
+at each point (KDE→leverage→sample→solve→predict→score in one `run_stages`
+fold), and records per-stage seconds, throughput, peak RSS, risk, and the
+streaming slab footprint to ``BENCH_pipeline.json`` — a list of records
+appended across runs, so successive commits build a trajectory.
 
   PYTHONPATH=src python -m benchmarks.bench_pipeline [--n-max 262144]
   PYTHONPATH=src python -m benchmarks.run --only pipeline --json BENCH_pipeline.json
 
 Stage subsets (the pipeline is a stage list, so partial runs are first-class;
-this is the CI smoke hook for stage-timing regressions):
+this is the CI smoke hook for stage-timing regressions — `--stages score`
+exercises the full evaluate fold):
 
   PYTHONPATH=src python -m benchmarks.bench_pipeline --stages kde --n 8192
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --stages score --n 8192
+
+Leverage-method comparison (the paper's §4.1 accuracy/cost claim): SA vs
+uniform vs Recursive-RLS vs BLESS, each sampled without replacement with
+inverse-inclusion weights feeding the weighted projection-leverage estimator
+(`rls.from_sketch`) and the weighted SoR solve:
+
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --compare --n 16384
 """
 
 from __future__ import annotations
@@ -24,9 +34,9 @@ import time
 
 import jax
 
-from repro.core import krr
+from repro.core import krr, nystrom, rls, sampling
 from repro.data import krr_data
-from repro.pipeline import PipelineConfig, SAKRRPipeline, default_stages
+from repro.pipeline import (PipelineConfig, SAKRRPipeline, evaluate_stages)
 
 
 def _peak_rss_mb() -> float:
@@ -44,9 +54,9 @@ def append_records(path: str, records: list[dict]) -> None:
 
 
 def _stage_subset(cfg: PipelineConfig, names: list[str]):
-    """Default stage list truncated after the last requested stage (earlier
+    """Evaluate stage list truncated after the last requested stage (earlier
     stages still run — later ones need their artifacts)."""
-    stages = default_stages(cfg)
+    stages = evaluate_stages(cfg)
     known = {s.name for s in stages}
     unknown = sorted(set(names) - known)
     if unknown:
@@ -61,29 +71,42 @@ def bench_one(n: int, tile: int, m: int | None, seed: int = 0,
     data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
     cfg = PipelineConfig(nu=1.5, tile=tile, num_landmarks=m)
     stage_list = _stage_subset(cfg, stages) if stages else None
+    n_eval = min(n, 50_000)
+    pipe = SAKRRPipeline(cfg, stages=stage_list)
+    # a subset stopping before the score stays a plain fit fold ("stops
+    # there" — evaluate() would force-append the missing ScoreStage);
+    # subsets reaching score run the evaluate fold with the synthetic truth
+    # wired into the score stage
+    fit_only = stage_list is not None and not any(
+        s.name == "score" for s in stage_list)
     t0 = time.perf_counter()
-    pipe = SAKRRPipeline(cfg, stages=stage_list).fit(data.x, data.y)
-    fit_s = time.perf_counter() - t0
+    if fit_only:
+        pipe.fit(data.x, data.y)
+    else:
+        pipe.evaluate(data.x, data.y, x_eval=data.x[:n_eval],
+                      y_eval=data.y[:n_eval], f_star=data.f_star[:n_eval])
+    total_s = time.perf_counter() - t0
     m_used = pipe.state.num_landmarks
+    fit_s = sum(v for k, v in pipe.seconds.items()
+                if k not in ("predict", "score"))
     rec = {
         "section": "pipeline",
         "n": n,
         "m": m_used,
         "tile": tile,
         "fit_seconds": round(fit_s, 4),
+        "total_seconds": round(total_s, 4),
         "stage_seconds": {k: round(v, 4) for k, v in pipe.seconds.items()},
         "peak_rss_mb": round(_peak_rss_mb(), 1),
     }
-    if pipe.state.fit is not None:   # full run: throughput, slab, predict
+    if pipe.state.fit is not None:   # solve ran: throughput + slab footprint
         rec["rows_per_second"] = round(n / max(fit_s, 1e-9))
         # memory story: the streaming slab is the largest transient buffer
         rec["slab_mb"] = round(tile * m_used * 4 / 2**20, 2)
-        n_eval = min(n, 50_000)
-        t0 = time.perf_counter()
-        pred = jax.block_until_ready(pipe.predict(data.x[:n_eval]))
-        rec["predict_seconds"] = round(time.perf_counter() - t0, 4)
+    if pipe.state.scores:            # evaluate fold reached the score stage
         rec["predict_n"] = n_eval
-        rec["risk"] = float(krr.in_sample_risk(pred, data.f_star[:n_eval]))
+        rec["risk"] = pipe.state.scores.get("risk")
+        rec["rmse"] = pipe.state.scores.get("rmse")
         rec["d_stat"] = float(pipe.d_stat)
     print(",".join(f"{k}={v}" for k, v in rec.items() if k != "stage_seconds"))
     print("  stages: " + ",".join(f"{k}={v}" for k, v in
@@ -91,23 +114,109 @@ def bench_one(n: int, tile: int, m: int | None, seed: int = 0,
     return rec
 
 
+# ------------------------------------------------------------------ compare --
+
+def compare_methods(n: int = 16_384, m: int | None = None,
+                    seed: int = 0) -> list[dict]:
+    """SA vs uniform vs Recursive-RLS vs BLESS at one n (paper §4.1 / Fig 1).
+
+    Every method's probs are sampled WITHOUT replacement (Gumbel top-k) with
+    inverse-inclusion weights; the weights feed both the weighted SoR solve
+    and the weighted projection-leverage estimator (`rls.from_sketch`), whose
+    statistical-dimension estimate is reported as `d_proj` — so the recorded
+    importance weights are load-bearing for every row of the table.
+    """
+    data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
+    cfg = PipelineConfig(nu=1.5, num_landmarks=m)
+    kern = cfg.build_kernel()
+    lam = cfg.resolve_lam(n)
+    m_used = cfg.resolve_num_landmarks(n)
+    n_eval = min(n, 50_000)
+    key = jax.random.PRNGKey(seed + 1)
+
+    def probs_for(method: str):
+        from repro.pipeline import (DensityStage, LeverageStage, StageContext,
+                                    run_stages)
+        t0 = time.perf_counter()
+        if method == "sa":
+            ctx = StageContext(config=cfg, kernel=kern, x=data.x, y=data.y,
+                               n=n, d=data.x.shape[1], lam=lam,
+                               num_landmarks=m_used)
+            run_stages([DensityStage(), LeverageStage()], ctx)
+            jax.block_until_ready(ctx.leverage.probs)
+            return ctx.leverage.probs, time.perf_counter() - t0
+        if method == "uniform":
+            return rls.uniform(n).probs, time.perf_counter() - t0
+        if method == "rc":
+            r = rls.recursive_rls(kern, data.x, lam, seed=seed)
+        elif method == "bless":
+            r = rls.bless(kern, data.x, lam, seed=seed)
+        else:
+            raise ValueError(method)
+        jax.block_until_ready(r.probs)
+        return r.probs, time.perf_counter() - t0
+
+    # warm up every jit cache the timed regions hit (all methods share the
+    # same shapes): the KDE/leverage fold for the 'sa' row, and the
+    # solve/predict pair every row runs — so no timed region absorbs
+    # compilation
+    warm_idx, warm_w = sampling.sample_weighted_without_replacement(
+        key, rls.uniform(n).probs, m_used)
+    warm = nystrom.fit_streaming(kern, data.x, data.y, lam, warm_idx,
+                                 tile=cfg.tile, weights=warm_w)
+    jax.block_until_ready(nystrom.predict_streaming(
+        kern, warm, data.x[:n_eval], tile=cfg.tile))
+
+    probs_for("sa")     # warm the binned-KDE + leverage jits, untimed
+
+    records = []
+    print("method,lev_seconds,solve_seconds,risk,d_proj")
+    for method in ("sa", "uniform", "rc", "bless"):
+        probs, lev_s = probs_for(method)
+        idx, w = sampling.sample_weighted_without_replacement(
+            key, probs, m_used)
+        t0 = time.perf_counter()
+        fit = nystrom.fit_streaming(kern, data.x, data.y, lam, idx,
+                                    tile=cfg.tile, weights=w)
+        pred = nystrom.predict_streaming(kern, fit, data.x[:n_eval],
+                                         tile=cfg.tile)
+        jax.block_until_ready(pred)
+        solve_s = time.perf_counter() - t0
+        risk = float(krr.in_sample_risk(pred, data.f_star[:n_eval]))
+        # weighted projection estimate from the same sketch: d_proj is the
+        # statistical dimension it implies (weights demonstrably consumed)
+        proj = rls.from_sketch(kern, data.x, lam, idx, weights=w)
+        d_proj = float(proj.leverage.sum())
+        rec = {"section": "pipeline_compare", "n": n, "m": m_used,
+               "method": method, "lev_seconds": round(lev_s, 4),
+               "solve_seconds": round(solve_s, 4), "risk": risk,
+               "d_proj": round(d_proj, 2)}
+        records.append(rec)
+        print(f"{method},{lev_s:.3f},{solve_s:.3f},{risk:.3e},{d_proj:.1f}")
+    return records
+
+
 def main(json_out: str | None = "BENCH_pipeline.json",
          n_max: int = 262_144, n_only: int | None = None,
-         stages: list[str] | None = None) -> None:
-    print("\n## pipeline (streaming SA->Nystrom)")
-    records = []
-    if n_only is not None or stages:
-        n = n_only or 16_384
-        records.append(bench_one(n, tile=min(n, 16_384), m=None,
-                                 stages=stages))
+         stages: list[str] | None = None, compare: bool = False) -> None:
+    if compare:
+        print("\n## pipeline compare (SA vs uniform vs RC vs BLESS)")
+        records = compare_methods(n=n_only or 16_384)
     else:
-        n = 16_384
-        while n <= n_max:
-            records.append(bench_one(n, tile=16_384, m=None))
-            n *= 4
-        # tile sweep at the top size: time/memory trade of the streaming slab
-        for tile in (4_096, 65_536):
-            records.append(bench_one(n_max, tile=tile, m=None))
+        print("\n## pipeline (streaming SA->Nystrom)")
+        records = []
+        if n_only is not None or stages:
+            n = n_only or 16_384
+            records.append(bench_one(n, tile=min(n, 16_384), m=None,
+                                     stages=stages))
+        else:
+            n = 16_384
+            while n <= n_max:
+                records.append(bench_one(n, tile=16_384, m=None))
+                n *= 4
+            # tile sweep at the top size: time/memory trade of the slab
+            for tile in (4_096, 65_536):
+                records.append(bench_one(n_max, tile=tile, m=None))
     if json_out:
         append_records(json_out, records)
         print(f"[appended {len(records)} records to {json_out}]")
@@ -120,8 +229,13 @@ if __name__ == "__main__":
                     help="single-point run at this n (no sweep)")
     ap.add_argument("--stages", default=None,
                     help="comma-separated stage subset, e.g. 'kde' or "
-                         "'kde,leverage' (runs prerequisites, stops there)")
+                         "'kde,leverage' or 'score' (runs prerequisites, "
+                         "stops there)")
+    ap.add_argument("--compare", action="store_true",
+                    help="SA vs uniform vs recursive-RLS vs BLESS risk/time "
+                         "table (weighted projection estimator)")
     ap.add_argument("--json", default="BENCH_pipeline.json")
     args = ap.parse_args()
     main(json_out=args.json or None, n_max=args.n_max, n_only=args.n,
-         stages=args.stages.split(",") if args.stages else None)
+         stages=args.stages.split(",") if args.stages else None,
+         compare=args.compare)

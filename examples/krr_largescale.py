@@ -33,17 +33,19 @@ def main() -> None:
 
     key = jax.random.PRNGKey(7)
 
-    # -- headline run: the full pipeline at n ------------------------------
+    # -- headline run: the full evaluate fold at n -------------------------
     n = args.n
     data = krr_data.bimodal(jax.random.fold_in(key, 0), n, d=3)
     cfg = PipelineConfig(nu=1.5, num_landmarks=args.m, tile=args.tile)
-    pipe = SAKRRPipeline(cfg).fit(data.x, data.y)
     n_eval = min(n, 100_000)
-    pred = pipe.predict(data.x[:n_eval])
-    err = float(krr.in_sample_risk(pred, data.f_star[:n_eval]))
+    pipe = SAKRRPipeline(cfg)
+    scores = pipe.evaluate(data.x, data.y, x_eval=data.x[:n_eval],
+                           y_eval=data.y[:n_eval],
+                           f_star=data.f_star[:n_eval])
     stage = "  ".join(f"{k}={v:.2f}s" for k, v in pipe.seconds.items())
     print(f"n={n:,} m={pipe.state.num_landmarks}  {stage}")
-    print(f"  d_stat≈{pipe.d_stat:.1f}   error={err:.5f}")
+    print(f"  d_stat≈{pipe.d_stat:.1f}   risk={scores['risk']:.5f}   "
+          f"rmse={scores['rmse']:.4f}")
 
     # -- leverage-method comparison at reduced n ---------------------------
     nc = args.compare_n

@@ -68,13 +68,44 @@ def sentinel_is_safe(kernel: "Kernel") -> bool:
     return float(kernel.from_distance(jnp.asarray(ROW_SENTINEL * 0.5))) == 0.0
 
 
+# Feature-count threshold below which pairwise distances are assembled from
+# exact per-coordinate differences instead of the MXU expansion.  The
+# expansion ||x-y||^2 = ||x||^2 + ||y||^2 - 2 x.y^T cancels catastrophically
+# when x ~ y: the fp32 error is O(eps * ||x||^2), and sqrt amplifies it to
+# O(||x|| * sqrt(eps)) ~ 3e-4 in the *distance* near r = 0 — fatal for
+# kernels with a kink at the origin (Matern nu=0.5).  The direct form
+# (x_j - y_j)^2 is exactly rounded per coordinate, and at d <= EXACT_DIST_D
+# the extra VPU work (d passes over the (n, m) tile) is negligible.  Shared
+# by this oracle and the Pallas `pairwise`/`gram` kernel bodies so all
+# backends agree to roundoff.
+EXACT_DIST_D = 4
+
+
+def exact_sq_dists(x: Array, y: Array, d: int) -> Array:
+    """(n, d_pad) x (m, d_pad) -> (n, m) exact squared distances over the
+    first `d` feature columns (2-D broadcasts only, so Pallas tile bodies
+    can share it; padded columns past `d` are all-zero and skipped).
+    """
+    sq = jnp.zeros((x.shape[0], y.shape[0]),
+                   dtype=jnp.promote_types(x.dtype, y.dtype))
+    for j in range(d):
+        diff = x[:, j][:, None] - y[:, j][None, :]
+        sq = sq + diff * diff
+    return sq
+
+
 def _sq_dists(x: Array, y: Array) -> Array:
     """Pairwise squared Euclidean distances, (n, d) x (m, d) -> (n, m).
 
-    Uses the MXU-friendly expansion ||x - y||^2 = ||x||^2 + ||y||^2 - 2 x.y^T
-    with a clamp at zero to absorb rounding.  This is the pure-jnp oracle; the
-    Pallas `pairwise` kernel computes the same quantity in tiles.
+    d <= EXACT_DIST_D accumulates exact per-coordinate squared differences
+    (well-conditioned near r = 0); larger d uses the MXU-friendly expansion
+    ||x - y||^2 = ||x||^2 + ||y||^2 - 2 x.y^T with a clamp at zero to absorb
+    rounding.  This is the pure-jnp oracle; the Pallas `pairwise` kernel
+    computes the same quantities in tiles.
     """
+    d = x.shape[-1]
+    if d <= EXACT_DIST_D:
+        return exact_sq_dists(x, y, d)
     x2 = jnp.sum(x * x, axis=-1)[:, None]
     y2 = jnp.sum(y * y, axis=-1)[None, :]
     xy = x @ y.T

@@ -17,10 +17,19 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.kernels import Kernel, kernel_matrix
 
 Array = jax.Array
+
+# fp32 LU on (K + n lam I) loses ~cond * eps ~ (lammax(K) / (n lam)) * eps
+# relative accuracy, and the fp32 *kernel matrix* itself carries O(eps)
+# eigenvalue noise (observed ~1e-6 negative tail eigenvalues at n=200) — so
+# once lam drops below ~sqrt(eps_f32) the fp32 path first stalls above the
+# noise floor and then explodes (lam=1e-9: training MSE 1.8e3 vs f64 0.10).
+# Below this threshold the eager path re-solves in f64.
+_F64_FALLBACK_LAM = float(np.sqrt(np.finfo(np.float32).eps))
 
 
 class KRRFit(NamedTuple):
@@ -32,9 +41,40 @@ class KRRFit(NamedTuple):
     lam: float
 
 
-def fit(kernel: Kernel, x: Array, y: Array, lam: float, jitter: float = 1e-6) -> KRRFit:
-    """Solve the exact KRR system (LU solve — robust at fp32 conditioning)."""
+def _fit_f64(kernel: Kernel, x: Array, y: Array, lam: float) -> KRRFit:
+    """Eager f64 solve (kernel matrix recomputed in f64 — the fp32 K_n's
+    rounding already swamps ridges this small).  The fp32-stabilizing jitter
+    is dropped: it would rival n*lam at these ridges, and f64 LU handles the
+    conditioning without it.  Results cast back to the caller's dtype so
+    downstream code sees the usual fp32 arrays."""
+    from jax.experimental import enable_x64
+
+    dtype = jnp.result_type(x.dtype, jnp.float32)
     n = x.shape[0]
+    with enable_x64():
+        x64 = jnp.asarray(np.asarray(x), jnp.float64)
+        y64 = jnp.asarray(np.asarray(y), jnp.float64)
+        k_n = kernel_matrix(kernel, x64)
+        coef = jnp.linalg.solve(k_n + n * lam * jnp.eye(n, dtype=jnp.float64),
+                                y64)
+        fitted = k_n @ coef
+    return KRRFit(coef=jnp.asarray(np.asarray(coef), dtype), x_train=x,
+                  fitted=jnp.asarray(np.asarray(fitted), dtype), lam=lam)
+
+
+def fit(kernel: Kernel, x: Array, y: Array, lam: float, jitter: float = 1e-6) -> KRRFit:
+    """Solve the exact KRR system (LU solve — robust at fp32 conditioning).
+
+    Ridges below sqrt(eps_f32) sit under the fp32 kernel matrix's own noise
+    floor; eager fp32 calls fall back to a full f64 solve there (tracing
+    callers keep the fp32 path — the fallback re-enters the kernel matrix
+    eagerly, which a jit trace cannot).
+    """
+    n = x.shape[0]
+    if (lam < _F64_FALLBACK_LAM
+            and jnp.result_type(x.dtype, jnp.float32) == jnp.float32
+            and not isinstance(jnp.asarray(x), jax.core.Tracer)):
+        return _fit_f64(kernel, x, y, lam)
     k_n = kernel_matrix(kernel, x)
     reg = (n * lam + jitter) * jnp.eye(n, dtype=k_n.dtype)
     coef = jnp.linalg.solve(k_n + reg, y)

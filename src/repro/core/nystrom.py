@@ -67,6 +67,26 @@ class NystromFit(NamedTuple):
     lam: float
 
 
+def weighted_normal_eq(g: Array, rhs: Array, k_mm: Array,
+                       weights: Array) -> tuple[Array, Array, Array]:
+    """Rescale the SoR normal equations by landmark column weights.
+
+    With W = diag(w), the weighted subset-of-regressors system uses columns
+    Z = K_nm W:  (W G W + n lam W K_mm W) gamma = W rhs, beta = W gamma —
+    the without-replacement path's importance correction
+    (`sampling.sample_weighted_without_replacement`).  In exact arithmetic
+    the SoR predictor is invariant to any positive column rescaling (beta
+    absorbs W^{-1} twice), so this changes results only through fp32
+    whitening/truncation order — a property the test suite locks in
+    (test_sampling_weights.py::test_sor_solve_invariant_to_weight_rescaling).
+    Returns the reweighted (G, rhs, K_mm); callers multiply the solved gamma
+    by w to recover beta in the unweighted basis.
+    """
+    w = weights.astype(g.dtype)
+    return (w[:, None] * g * w[None, :], w * rhs,
+            w[:, None] * k_mm.astype(g.dtype) * w[None, :])
+
+
 def solve_normal_eq(g: Array, rhs: Array, k_mm: Array, n: int, lam: float,
                     jitter: float = 1e-6) -> Array:
     """beta = (G + n lam K_mm)^{-1} rhs via spectrally-truncated whitening.
@@ -113,6 +133,7 @@ def fit_from_landmarks(
     lam: float,
     landmark_idx: Array,
     jitter: float = 1e-6,
+    weights: Array | None = None,
 ) -> NystromFit:
     n = x.shape[0]
     xm = x[landmark_idx]
@@ -120,7 +141,12 @@ def fit_from_landmarks(
     k_mm = kernel_matrix(kernel, xm)                      # (m, m)
     g = jax.lax.dot_general(k_nm, k_nm, (((0,), (0,)), ((), ())),
                             preferred_element_type=k_nm.dtype)
-    beta = solve_normal_eq(g, k_nm.T @ y, k_mm, n, lam, jitter=jitter)
+    rhs = k_nm.T @ y
+    if weights is not None:
+        g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
+    beta = solve_normal_eq(g, rhs, k_mm, n, lam, jitter=jitter)
+    if weights is not None:
+        beta = weights.astype(beta.dtype) * beta
     return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx, lam=lam)
 
 
@@ -232,11 +258,16 @@ def fit_streaming(
     backend: str | None = None,
     interpret: bool | None = None,
     jitter: float = 1e-6,
+    weights: Array | None = None,
 ) -> NystromFit:
     """`fit_from_landmarks` without ever materializing K_nm.
 
     Matches the dense solve to fp32 reduction-order tolerance
     (tests/test_streaming_nystrom.py: <= 1e-4 relative on beta).
+    `weights` applies the without-replacement importance correction as a
+    post-accumulation O(m^2) column rescaling (`weighted_normal_eq`) — the
+    row stream itself is weight-free, so the Pallas/XLA accumulation kernels
+    are untouched.
     """
     _require_sentinel_safe(kernel)
     n = x.shape[0]
@@ -245,9 +276,12 @@ def fit_streaming(
                                  backend=backend, interpret=interpret)
     # k_mm is O(m^2) work — the core path keeps it in the input dtype, which
     # the dense solve also uses (dtype parity matters more than MXU here).
-    k_mm = kernel_matrix(kernel, xm)
-    beta = solve_normal_eq(g, rhs, k_mm.astype(g.dtype), n, lam,
-                           jitter=jitter)
+    k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
+    if weights is not None:
+        g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
+    beta = solve_normal_eq(g, rhs, k_mm, n, lam, jitter=jitter)
+    if weights is not None:
+        beta = weights.astype(beta.dtype) * beta
     return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx,
                       lam=lam)
 

@@ -37,10 +37,11 @@ from repro.core.kernels import Kernel
 Array = jax.Array
 
 
-def kernel_matrix(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
+def kernel_matrix(kernel: Kernel, x: Array, y: Array | None = None,
+                  backend: str | None = None) -> Array:
     """Backend-dispatched kernel matrix (Pallas `pairwise` on TPU)."""
     from repro.kernels import dispatch
-    return dispatch.kernel_matrix(kernel, x, y)
+    return dispatch.kernel_matrix(kernel, x, y, backend=backend)
 
 
 class RLSResult(NamedTuple):
@@ -54,17 +55,25 @@ def uniform(n: int) -> RLSResult:
     return RLSResult(leverage=p * n, probs=p, sketch_size=0)
 
 
-def _projection_leverage(
+def projection_leverage(
     kernel: Kernel,
     x: Array,
     sketch_x: Array,
     weights: Array,
     mu: float,
     jitter: float = 1e-6,
+    backend: str | None = None,
 ) -> Array:
-    """Weighted projection estimate of ridge leverage for all n points."""
-    k_ns = kernel_matrix(kernel, x, sketch_x)            # (n, m)
-    k_ss = kernel_matrix(kernel, sketch_x)               # (m, m)
+    """Weighted projection estimate of ridge leverage for all n points.
+
+    `weights` are inverse inclusion probabilities of the sketch points (the
+    Bernoulli sketches of Recursive-RLS/BLESS and the Gumbel top-k threshold
+    weights from `sampling.sample_weighted_without_replacement` both follow
+    this convention).  The K_{:,S} blocks go through `kernels.dispatch`, so
+    the Pallas `pairwise` backend serves them on TPU (`backend` overrides).
+    """
+    k_ns = kernel_matrix(kernel, x, sketch_x, backend=backend)   # (n, m)
+    k_ss = kernel_matrix(kernel, sketch_x, backend=backend)      # (m, m)
     w_half = jnp.sqrt(weights)
     mat = w_half[:, None] * k_ss * w_half[None, :]
     m = sketch_x.shape[0]
@@ -75,6 +84,33 @@ def _projection_leverage(
     k_diag = jnp.ones(x.shape[0], dtype=k_ns.dtype)      # stationary: K_ii = K(0) = 1
     lev = (k_diag - quad) / mu
     return jnp.clip(lev, 1e-12, 1.0)
+
+
+def from_sketch(
+    kernel: Kernel,
+    x: Array,
+    lam: float,
+    sketch_idx: Array,
+    weights: Array | None = None,
+    jitter: float = 1e-6,
+    backend: str | None = None,
+) -> RLSResult:
+    """Projection leverage from an index sketch — the SA-sampled entry point.
+
+    Feeds the pipeline's Gumbel top-k landmarks (`state.fit.landmark_idx`)
+    and their recorded importance weights (`state.sample_weights`) into the
+    same weighted projection estimator the algebraic baselines use, turning
+    the sampled landmark set into full-design leverage estimates at
+    O(n m) kernel evaluations.  weights=None means uniform (w = 1).
+    """
+    n = x.shape[0]
+    sketch_x = jnp.take(x, jnp.asarray(sketch_idx, jnp.int32), axis=0)
+    w = (jnp.ones(sketch_x.shape[0], dtype=x.dtype) if weights is None
+         else jnp.asarray(weights))
+    lev = projection_leverage(kernel, x, sketch_x, w, mu=n * lam,
+                              jitter=jitter, backend=backend)
+    return RLSResult(leverage=lev, probs=lev / jnp.sum(lev),
+                     sketch_size=int(sketch_x.shape[0]))
 
 
 def _bernoulli_sketch(rng: np.random.Generator, inclusion: np.ndarray):
@@ -106,7 +142,7 @@ def recursive_rls(
         half = rng.permutation(indices)[: m // 2]
         sketch_idx, sketch_w = recurse(half)
         lev = np.asarray(
-            _projection_leverage(
+            projection_leverage(
                 kernel, jnp.asarray(x_np[half]), jnp.asarray(x_np[sketch_idx]),
                 jnp.asarray(sketch_w), mu,
             )
@@ -118,7 +154,7 @@ def recursive_rls(
         return half[pick], w
 
     sketch_idx, sketch_w = recurse(np.arange(n))
-    lev = _projection_leverage(
+    lev = projection_leverage(
         kernel, x, jnp.asarray(x_np[sketch_idx]), jnp.asarray(sketch_w), mu
     )
     return RLSResult(
@@ -153,7 +189,7 @@ def bless(
     for _ in range(steps):
         mu = max(mu / anneal, mu_final)
         lev = np.asarray(
-            _projection_leverage(
+            projection_leverage(
                 kernel, x, jnp.asarray(x_np[sketch_idx]), jnp.asarray(sketch_w), mu
             )
         )
@@ -163,7 +199,7 @@ def bless(
             pick, w = sketch_idx, sketch_w
             continue
         sketch_idx, sketch_w = pick, w
-    lev = _projection_leverage(
+    lev = projection_leverage(
         kernel, x, jnp.asarray(x_np[sketch_idx]), jnp.asarray(sketch_w), mu_final
     )
     return RLSResult(

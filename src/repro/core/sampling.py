@@ -27,30 +27,53 @@ def sample_with_replacement(key: jax.Array, probs: Array, m: int) -> Array:
     return jax.random.categorical(key, logits, shape=(m,))
 
 
-def sample_without_replacement(key: jax.Array, probs: Array, m: int) -> Array:
-    """Gumbel top-k sampling of m distinct indices proportional to probs."""
+def _perturbed_logits(key: jax.Array, probs: Array) -> Array:
     logits = jnp.log(jnp.maximum(probs, 1e-38))
     gumbel = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
-    return jax.lax.top_k(logits + gumbel, m)[1]
+    return logits + gumbel
+
+
+def sample_without_replacement(key: jax.Array, probs: Array, m: int) -> Array:
+    """Gumbel top-k sampling of m distinct indices proportional to probs."""
+    return jax.lax.top_k(_perturbed_logits(key, probs), m)[1]
 
 
 def sample_weighted_without_replacement(
         key: jax.Array, probs: Array, m: int) -> tuple[Array, Array]:
-    """Gumbel top-k landmarks + importance weights 1/sqrt(m q_i).
+    """Gumbel top-k landmarks + inverse-inclusion importance weights.
 
     With-replacement sampling at m >= 1024 wastes budget on duplicate
     landmarks whose K_mm null directions the solver truncates; Gumbel top-k
-    spends every slot on a distinct point.  The returned weights are the
-    usual importance correction (normalized to mean 1 for scale stability).
-    The subset-of-regressors Nystrom solve is invariant to positive column
-    rescaling, so the weights do not enter `nystrom.fit_streaming`; they are
-    recorded for estimators that are not (projection/RLS variants) and for
-    diagnostics.  Requires m <= len(probs).
+    spends every slot on a distinct point.
+
+    The weights are 1 / pi_hat_i with pi_hat_i the inclusion probability
+    estimated by the exponential-race threshold trick (Duffield et al.
+    priority sampling / Pareto sampling): the perturbed logit log q_i + g_i
+    equals -log t_i for an arrival time t_i = E_i / q_i, E_i ~ Exp(1), so
+    top-k selection is bottom-k on arrivals.  Conditioned on the (m+1)-th
+    arrival tau, inclusions are INDEPENDENT with
+
+        pi_hat_i = P(t_i < tau | tau) = 1 - exp(-q_i tau),
+
+    which makes 1{i in S} / pi_hat_i an (approximately) unbiased inclusion
+    estimator — the convention the weighted projection-leverage estimator
+    (`rls.projection_leverage`) and the Bernoulli sketches of Recursive-RLS /
+    BLESS already use (their weights are 1/inclusion too).  Certain
+    inclusions get weight ~1.  The subset-of-regressors Nystrom solve is
+    invariant to positive column rescaling (see `nystrom.fit_streaming`), so
+    there the weights only exercise the weighted code path; the projection /
+    RLS estimators genuinely consume them.  Requires m <= len(probs); at
+    m == n there is no threshold arrival and every weight is exactly 1.
     """
-    idx = sample_without_replacement(key, probs, m)
-    q = jnp.maximum(probs[idx], 1e-38)
-    w = 1.0 / jnp.sqrt(m * q)
-    return idx, w / jnp.mean(w)
+    n = probs.shape[0]
+    s = _perturbed_logits(key, probs)
+    if m >= n:
+        return jax.lax.top_k(s, m)[1], jnp.ones((m,), dtype=probs.dtype)
+    vals, idx = jax.lax.top_k(s, m + 1)
+    tau = jnp.exp(-vals[m])                       # (m+1)-th arrival time
+    q_sel = jnp.maximum(probs[idx[:m]], 1e-38)
+    inclusion = -jnp.expm1(-q_sel * tau)
+    return idx[:m], 1.0 / jnp.clip(inclusion, 1e-12, 1.0)
 
 
 def bernoulli_subset(key: jax.Array, inclusion: Array):

@@ -40,18 +40,27 @@ Array = jax.Array
 
 # Shared with the core streaming solve: rows parked here are ~1e6 away from
 # any real data, so all supported kernel maps underflow to exactly 0.0.
-from repro.core.kernels import ROW_SENTINEL  # noqa: E402,F401
+from repro.core.kernels import ROW_SENTINEL, exact_sq_dists  # noqa: E402,F401
 
 
 def _kernel_tile(x, y, *, kind: str, nu: float, a: float,
-                 inv_two_sigma_sq: float):
-    """(bm, d) x (bn, d) -> (bm, bn) kernel tile; same math as pairwise."""
-    xy = jax.lax.dot_general(
-        x, y, (((1,), (1,)), ((), ())), preferred_element_type=x.dtype
-    )
-    x2 = jnp.sum(x * x, axis=1)[:, None]
-    y2 = jnp.sum(y * y, axis=1)[None, :]
-    sq = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+                 inv_two_sigma_sq: float, exact_d: int = 0):
+    """(bm, d) x (bn, d) -> (bm, bn) kernel tile; same math as pairwise.
+
+    exact_d > 0 assembles squared distances from exact per-coordinate
+    differences (`core.kernels.exact_sq_dists` — the MXU expansion cancels
+    catastrophically near r = 0 at small d, see core.kernels.EXACT_DIST_D);
+    sentinel-padded rows still map through huge distances to exactly 0.
+    """
+    if exact_d > 0:
+        sq = exact_sq_dists(x, y, exact_d)
+    else:
+        xy = jax.lax.dot_general(
+            x, y, (((1,), (1,)), ((), ())), preferred_element_type=x.dtype
+        )
+        x2 = jnp.sum(x * x, axis=1)[:, None]
+        y2 = jnp.sum(y * y, axis=1)[None, :]
+        sq = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
     if kind == "gaussian":
         return jnp.exp(-sq * inv_two_sigma_sq)
     ar = a * jnp.sqrt(sq)
@@ -63,7 +72,7 @@ def _kernel_tile(x, y, *, kind: str, nu: float, a: float,
 
 
 def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *, kind: str,
-               nu: float, a: float, inv_two_sigma_sq: float):
+               nu: float, a: float, inv_two_sigma_sq: float, exact_d: int):
     k = pl.program_id(1)
     i = pl.program_id(2)
     # f32 compute floor; preserves f64 when fed f64 (interpret-mode parity
@@ -73,7 +82,8 @@ def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *, kind: str,
     yj = yj_ref[...].astype(acc)  # (bn, d) landmark tile j
     yk = yk_ref[...].astype(acc)  # (bn, d) landmark tile k
     tile = functools.partial(_kernel_tile, kind=kind, nu=nu, a=a,
-                             inv_two_sigma_sq=inv_two_sigma_sq)
+                             inv_two_sigma_sq=inv_two_sigma_sq,
+                             exact_d=exact_d)
     j = pl.program_id(0)
     kj = tile(x, yj)                      # (bm, bn)
     kk = jax.lax.cond(j == k, lambda: kj, lambda: tile(x, yk))
@@ -102,7 +112,7 @@ def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *, kind: str,
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "nu", "a", "sigma", "bm", "bn", "out_dtype",
-                     "interpret"),
+                     "interpret", "exact_d"),
 )
 def gram_padded(
     x: Array,
@@ -117,6 +127,7 @@ def gram_padded(
     bn: int = 256,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    exact_d: int = 0,
 ) -> tuple[Array, Array]:
     """Core pallas_call; requires n % bm == 0 and m % bn == 0 (see ops.py)."""
     n, d = x.shape
@@ -129,6 +140,7 @@ def gram_padded(
         nu=float(nu),
         a=float(a),
         inv_two_sigma_sq=1.0 / (2.0 * float(sigma) ** 2),
+        exact_d=int(exact_d),
     )
     return pl.pallas_call(
         body,

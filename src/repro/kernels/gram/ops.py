@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kernels as core_kernels
-from repro.core.kernels import pad_rows_sentinel, round_up
+from repro.core.kernels import EXACT_DIST_D, pad_rows_sentinel, round_up
 from repro.kernels.gram import kernel as gk
 from repro.kernels.gram import ref
 from repro.kernels.pairwise.ops import kernel_params  # shared adapter
@@ -77,6 +77,7 @@ def gram(
         jnp.pad(w.astype(out_dtype)[:, None], ((0, np_ - n), (0, 0))),
         kind=kind, nu=nu, a=a, sigma=sigma, bm=bm_, bn=bn_,
         out_dtype=out_dtype, interpret=interpret,
+        exact_d=d if d <= EXACT_DIST_D else 0,
     )
     return g[:m, :m], r[:m, 0]
 

@@ -26,20 +26,36 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.kernels import exact_sq_dists
+
 Array = jax.Array
 
 
-def _kernel_body(x_ref, y_ref, out_ref, *, kind: str, nu: float, a: float,
-                 inv_two_sigma_sq: float):
-    x = x_ref[...].astype(jnp.float32)  # (bm, d)
-    y = y_ref[...].astype(jnp.float32)  # (bn, d)
+def _sq_dist_tile(x, y, exact_d: int):
+    """(bm, d) x (bn, d) -> (bm, bn) squared distances.
+
+    exact_d > 0 accumulates exact per-coordinate differences over the first
+    exact_d feature columns (`core.kernels.exact_sq_dists` — 2-D VPU
+    broadcasts; well-conditioned near r = 0, where the MXU expansion cancels
+    catastrophically, see core.kernels.EXACT_DIST_D).  Padded feature
+    columns past exact_d are all-zero and contribute nothing either way.
+    """
+    if exact_d > 0:
+        return exact_sq_dists(x, y, exact_d)
     # MXU cross term with explicit fp32 accumulation.
     xy = jax.lax.dot_general(
         x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (bm, bn)
     x2 = jnp.sum(x * x, axis=1)[:, None]
     y2 = jnp.sum(y * y, axis=1)[None, :]
-    sq = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+    return jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+
+
+def _kernel_body(x_ref, y_ref, out_ref, *, kind: str, nu: float, a: float,
+                 inv_two_sigma_sq: float, exact_d: int):
+    x = x_ref[...].astype(jnp.float32)  # (bm, d)
+    y = y_ref[...].astype(jnp.float32)  # (bn, d)
+    sq = _sq_dist_tile(x, y, exact_d)
     if kind == "gaussian":
         k = jnp.exp(-sq * inv_two_sigma_sq)
     else:
@@ -55,7 +71,8 @@ def _kernel_body(x_ref, y_ref, out_ref, *, kind: str, nu: float, a: float,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "nu", "a", "sigma", "bm", "bn", "out_dtype", "interpret"),
+    static_argnames=("kind", "nu", "a", "sigma", "bm", "bn", "out_dtype",
+                     "interpret", "exact_d"),
 )
 def pairwise_padded(
     x: Array,
@@ -69,6 +86,7 @@ def pairwise_padded(
     bn: int = 256,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    exact_d: int = 0,
 ) -> Array:
     """Core pallas_call; requires n % bm == 0 and m % bn == 0 (see ops.py)."""
     n, d = x.shape
@@ -81,6 +99,7 @@ def pairwise_padded(
         nu=float(nu),
         a=float(a),
         inv_two_sigma_sq=1.0 / (2.0 * float(sigma) ** 2),
+        exact_d=int(exact_d),
     )
     return pl.pallas_call(
         body,

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kernels as core_kernels
-from repro.core.kernels import round_up
+from repro.core.kernels import EXACT_DIST_D, round_up
 from repro.kernels.pairwise import kernel as pk
 from repro.kernels.pairwise import ref
 
@@ -76,6 +76,7 @@ def pairwise(
         _pad_to(x, np_, dp), _pad_to(y, mp, dp),
         kind=kind, nu=nu, a=a, sigma=sigma, bm=bm_, bn=bn_,
         out_dtype=out_dtype, interpret=interpret,
+        exact_d=d if d <= EXACT_DIST_D else 0,
     )
     return out[:n, :m]
 

@@ -10,12 +10,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.kernels import EXACT_DIST_D, exact_sq_dists
+
 Array = jax.Array
 
 
 def sq_dists(x: Array, y: Array) -> Array:
     x = x.astype(jnp.float32)
     y = y.astype(jnp.float32)
+    if x.shape[-1] <= EXACT_DIST_D:
+        # Exact per-coordinate differences: the expansion below cancels
+        # catastrophically near r = 0 at small d (see core.kernels._sq_dists).
+        return exact_sq_dists(x, y, x.shape[-1])
     x2 = jnp.sum(x * x, axis=-1)[:, None]
     y2 = jnp.sum(y * y, axis=-1)[None, :]
     return jnp.maximum(x2 + y2 - 2.0 * (x @ y.T), 0.0)

@@ -4,6 +4,7 @@
 
     pipe = SAKRRPipeline(PipelineConfig(nu=1.5, tile=8192)).fit(x, y)
     y_hat = pipe.predict(x_new)
+    scores = SAKRRPipeline(cfg).evaluate(x, y, f_star=f_star)  # one fold
 
 See `repro.pipeline.api` for the full contract.
 """
@@ -18,11 +19,14 @@ from repro.pipeline.stages import (  # noqa: F401
     FixedLandmarkStage,
     LeverageStage,
     PrecomputedDensityStage,
+    PredictStage,
     SampleStage,
+    ScoreStage,
     SolveStage,
     Stage,
     StageContext,
     StageError,
     default_stages,
+    evaluate_stages,
     run_stages,
 )

@@ -25,12 +25,19 @@ workloads — precomputed densities, fixed landmarks, KDE-only benchmarking):
                  K_nm^T K_nm and rhs = K_nm^T y accumulated over row tiles
                  (lax.scan on XLA, the fused Pallas `gram` kernel on TPU) —
                  the (n, m) cross-kernel matrix is never materialized;
-  5. predict   — `nystrom.predict_streaming`, O(tile · m) per batch, row-
-                 sharded under a mesh.
+  5. predict   — `stages.PredictStage` -> `nystrom.predict_streaming`,
+                 O(tile · m) per batch, row-sharded under a mesh;
+  6. score     — `stages.ScoreStage`: mse/rmse against observed targets,
+                 the paper's R_n risk against f_star when known.
+
+`predict` runs through the same stage fold as `fit` (so its backend/tile
+overrides and wall-clock seconds follow the same contract), and
+`evaluate(x, y, f_star=...)` folds all six stages in one `run_stages` pass —
+the entry point that measures the paper's §4.1 claim end-to-end.
 
 Each stage records its wall-clock seconds in `state.seconds`, so benchmarks
-(benchmarks/bench_pipeline.py, incl. `--stages kde` subsets) get the
-trajectory for free.
+(benchmarks/bench_pipeline.py, incl. `--stages kde`/`--stages score`
+subsets) get the trajectory for free.
 """
 
 from __future__ import annotations
@@ -115,7 +122,9 @@ class PipelineState:
     leverage: Optional[leverage.SALeverage]
     fit: Optional[nystrom.NystromFit]
     seconds: dict[str, float]               # per-stage wall clock
-    sample_weights: Optional[Array] = None  # (m,) Gumbel top-k importance wts
+    sample_weights: Optional[Array] = None  # (m,) inverse-inclusion weights
+    predictions: Optional[Array] = None     # (n_eval,) PredictStage output
+    scores: Optional[dict[str, float]] = None  # ScoreStage metrics
 
 
 class SAKRRPipeline:
@@ -134,40 +143,99 @@ class SAKRRPipeline:
         self.stages = (list(stages) if stages is not None
                        else stages_mod.default_stages(self.config))
         self.state: PipelineState | None = None
+        self._ctx: stages_mod.StageContext | None = None
 
     # ------------------------------------------------------------------ fit --
-    def fit(self, x: Array, y: Array) -> "SAKRRPipeline":
+    def _make_context(self, x: Array, y: Array,
+                      **eval_inputs: Any) -> stages_mod.StageContext:
         cfg = self.config
         n, d = x.shape
-        ctx = stages_mod.StageContext(
+        return stages_mod.StageContext(
             config=cfg, kernel=self.kernel, x=x, y=y, n=n, d=d,
             lam=cfg.resolve_lam(n),
-            num_landmarks=cfg.resolve_num_landmarks(n))
-        stages_mod.run_stages(self.stages, ctx)
+            num_landmarks=cfg.resolve_num_landmarks(n), **eval_inputs)
+
+    def _snapshot(self, ctx: stages_mod.StageContext) -> None:
+        self._ctx = ctx
         self.state = PipelineState(
-            n=n, d=d, lam=ctx.lam, num_landmarks=ctx.num_landmarks,
+            n=ctx.n, d=ctx.d, lam=ctx.lam, num_landmarks=ctx.num_landmarks,
             densities=ctx.densities, leverage=ctx.leverage, fit=ctx.fit,
-            seconds=ctx.seconds, sample_weights=ctx.sample_weights)
+            seconds=ctx.seconds, sample_weights=ctx.sample_weights,
+            predictions=ctx.predictions, scores=ctx.scores)
+
+    def fit(self, x: Array, y: Array) -> "SAKRRPipeline":
+        ctx = self._make_context(x, y)
+        stages_mod.run_stages(self.stages, ctx)
+        self._snapshot(ctx)
         return self
 
+    # ------------------------------------------------------------- evaluate --
+    def evaluate(self, x: Array, y: Array, *, f_star: Array | None = None,
+                 x_eval: Array | None = None, y_eval: Array | None = None
+                 ) -> dict[str, float]:
+        """KDE -> leverage -> sample -> solve -> predict -> score in ONE
+        `run_stages` fold.
+
+        Default is the paper's in-sample setting (predict at x, mse against
+        y, risk against f_star when the workload knows the noiseless truth);
+        pass x_eval/y_eval for held-out scoring.  Returns the ScoreStage
+        metrics dict; the full artifacts (predictions, per-stage seconds)
+        land on `self.state` like fit's do.  A custom stage list is
+        COMPLETED, not truncated: missing Predict/Score stages are appended
+        (evaluate always scores — use `fit` for folds that must stop
+        earlier).
+        """
+        ctx = self._make_context(x, y, x_eval=x_eval, y_eval=y_eval,
+                                 f_star=f_star)
+        eval_stages = list(self.stages)
+        if not any(isinstance(s, stages_mod.PredictStage)
+                   for s in eval_stages):
+            # insert before any user-supplied ScoreStage (which requires the
+            # predictions artifact), else append
+            at = next((i for i, s in enumerate(eval_stages)
+                       if isinstance(s, stages_mod.ScoreStage)),
+                      len(eval_stages))
+            eval_stages.insert(at, stages_mod.PredictStage(
+                backend=self._predict_backend(), tile=self._predict_tile()))
+        if not any(isinstance(s, stages_mod.ScoreStage) for s in eval_stages):
+            eval_stages.append(stages_mod.ScoreStage())
+        stages_mod.run_stages(eval_stages, ctx)
+        self._snapshot(ctx)
+        return dict(ctx.scores or {})
+
     # -------------------------------------------------------------- predict --
+    def _predict_backend(self) -> str | None:
+        # honor the SolveStage's per-stage overrides so fit and predict run
+        # the same backend/tile unless the caller says otherwise
+        solve = next((s for s in self.stages
+                      if isinstance(s, stages_mod.SolveStage)), None)
+        return (solve.backend if solve is not None and
+                solve.backend is not None
+                else stages_mod.resolve_backend(self.config))
+
+    def _predict_tile(self, tile: int | None = None) -> int:
+        if tile is not None:
+            return tile
+        solve = next((s for s in self.stages
+                      if isinstance(s, stages_mod.SolveStage)), None)
+        return (solve.tile if solve is not None and solve.tile is not None
+                else self.config.tile)
+
     def predict(self, x_new: Array, tile: int | None = None) -> Array:
         st = self._fitted_state()
         if st.fit is None:
             raise RuntimeError("the fitted stage list produced no solve; "
                                "include a SolveStage to predict")
-        # honor the SolveStage's per-stage overrides so fit and predict run
-        # the same backend/tile unless the caller says otherwise
-        solve = next((s for s in self.stages
-                      if isinstance(s, stages_mod.SolveStage)), None)
-        backend = (solve.backend if solve is not None and
-                   solve.backend is not None
-                   else stages_mod.resolve_backend(self.config))
-        if tile is None:
-            tile = (solve.tile if solve is not None and solve.tile is not None
-                    else self.config.tile)
-        return nystrom.predict_streaming(self.kernel, st.fit, x_new,
-                                         tile=tile, backend=backend)
+        # predict is the same stage fold as fit: one PredictStage folded over
+        # the fitted context, so per-stage timing and overrides are uniform
+        ctx = self._ctx
+        ctx.scores = None   # any earlier scores described the old predictions
+        stage = stages_mod.PredictStage(
+            x_eval=x_new, backend=self._predict_backend(),
+            tile=self._predict_tile(tile))
+        stages_mod.run_stages([stage], ctx)
+        self._snapshot(ctx)
+        return ctx.predictions
 
     def fitted(self, x_train: Array) -> Array:
         """In-sample predictions (the paper's R_n functional)."""

@@ -1,9 +1,10 @@
-"""Composable pipeline stages: KDE, leverage, sampling, solve as uniform
-stage objects.
+"""Composable pipeline stages: KDE, leverage, sampling, solve, predict and
+score as uniform stage objects.
 
-`SAKRRPipeline.fit` is a fold over a list of stages.  Each stage reads and
-writes named artifacts on a shared `StageContext` (densities -> leverage ->
-landmark_idx -> fit), declares what it `requires`/`provides`, and records
+`SAKRRPipeline.fit` / `.predict` / `.evaluate` are folds over a list of
+stages.  Each stage reads and writes named artifacts on a shared
+`StageContext` (densities -> leverage -> landmark_idx -> fit ->
+predictions -> scores), declares what it `requires`/`provides`, and records
 its own wall-clock seconds — so benchmarks get per-stage timing for free
 and new workloads compose instead of forking the pipeline class:
 
@@ -11,6 +12,8 @@ and new workloads compose instead of forking the pipeline class:
                              SampleStage(), SolveStage()]
   * fixed landmarks:        [FixedLandmarkStage(idx), SolveStage()]
   * KDE-only benchmarking:  [DensityStage()]          (bench --stages kde)
+  * end-to-end evaluation:  default_stages() + [PredictStage(),
+                             ScoreStage()]            (bench --stages score)
 
 Per-stage execution config (backend / tile / sharding) is a constructor
 argument on the stage, overriding the pipeline-wide `PipelineConfig`
@@ -59,6 +62,12 @@ class StageContext:
     landmark_idx: Optional[Array] = None
     sample_weights: Optional[Array] = None
     fit: Optional[nystrom.NystromFit] = None
+    # evaluation inputs (PredictStage/ScoreStage): default to in-sample
+    x_eval: Optional[Array] = None          # defaults to x
+    y_eval: Optional[Array] = None          # observed targets at x_eval
+    f_star: Optional[Array] = None          # noiseless truth at x_eval
+    predictions: Optional[Array] = None
+    scores: Optional[dict[str, float]] = None
     seconds: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def require(self, *names: str) -> None:
@@ -225,23 +234,107 @@ class FixedLandmarkStage(Stage):
 class SolveStage(Stage):
     """Streaming Nystrom normal equations on the sampled landmarks
     (lax.scan row slabs on XLA, the fused Pallas `gram` kernel on TPU;
-    rows psum-sharded under an active mesh)."""
+    rows psum-sharded under an active mesh).
+
+    ``weighted=True`` feeds the without-replacement importance weights
+    (`ctx.sample_weights`, when present) into the column-rescaled SoR solve
+    (`nystrom.weighted_normal_eq`).  The SoR predictor is invariant to the
+    rescaling in exact arithmetic, so this is off by default — fp32
+    whitening order shifts results slightly and the unweighted solve is the
+    parity oracle for the dense path."""
 
     name = "solve"
     requires = ("landmark_idx",)
     provides = ("fit",)
 
-    def __init__(self, *, backend: str | None = None, tile: int | None = None):
+    def __init__(self, *, backend: str | None = None, tile: int | None = None,
+                 weighted: bool = False):
+        self.backend = backend
+        self.tile = tile
+        self.weighted = weighted
+
+    def run(self, ctx: StageContext) -> None:
+        cfg = ctx.config
+        weights = ctx.sample_weights if self.weighted else None
+        ctx.fit = nystrom.fit_streaming(
+            ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
+            tile=self.tile if self.tile is not None else cfg.tile,
+            backend=self.backend if self.backend is not None else _backend(cfg),
+            jitter=cfg.jitter, weights=weights)
+
+
+class PredictStage(Stage):
+    """Batched predictions at `x_eval` (default: in-sample, ctx.x) through
+    `nystrom.predict_streaming` — O(tile * m) per batch, row-sharded under
+    an active mesh exactly like the solve.  backend/tile overrides follow
+    the SolveStage convention (stage constructor beats config)."""
+
+    name = "predict"
+    requires = ("fit",)
+    provides = ("predictions",)
+
+    def __init__(self, *, x_eval: Array | None = None,
+                 backend: str | None = None, tile: int | None = None):
+        self.x_eval = x_eval
         self.backend = backend
         self.tile = tile
 
     def run(self, ctx: StageContext) -> None:
         cfg = ctx.config
-        ctx.fit = nystrom.fit_streaming(
-            ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
+        if self.x_eval is not None:
+            ctx.x_eval = jnp.asarray(self.x_eval)
+        if ctx.x_eval is None:
+            ctx.x_eval = ctx.x                       # the paper's R_n setting
+        ctx.predictions = nystrom.predict_streaming(
+            ctx.kernel, ctx.fit, ctx.x_eval,
             tile=self.tile if self.tile is not None else cfg.tile,
-            backend=self.backend if self.backend is not None else _backend(cfg),
-            jitter=cfg.jitter)
+            backend=self.backend if self.backend is not None
+            else _backend(cfg))
+
+
+class ScoreStage(Stage):
+    """Scalar quality metrics from the predictions.
+
+    Emits a dict on `ctx.scores`:
+
+      * ``mse`` / ``rmse``  — against the observed targets ``y_eval``
+        (defaulting to ctx.y when the predictions are in-sample);
+      * ``risk``            — the paper's R_n functional, against the
+        noiseless ``f_star`` when the workload knows it (synthetic data).
+
+    Values are host floats (the stage blocks on them, so its recorded
+    seconds include the device work it triggered).
+    """
+
+    name = "score"
+    requires = ("predictions",)
+    provides = ("scores",)
+
+    def __init__(self, *, f_star: Array | None = None,
+                 y_eval: Array | None = None):
+        self.f_star = f_star
+        self.y_eval = y_eval
+
+    def run(self, ctx: StageContext) -> None:
+        if self.y_eval is not None:
+            ctx.y_eval = jnp.asarray(self.y_eval)
+        if self.f_star is not None:
+            ctx.f_star = jnp.asarray(self.f_star)
+        if ctx.y_eval is None and ctx.x_eval is ctx.x:
+            ctx.y_eval = ctx.y                       # in-sample default
+        if ctx.y_eval is None and ctx.f_star is None:
+            raise StageError(
+                "ScoreStage needs targets: set y_eval and/or f_star (on the "
+                "stage or the context) for out-of-sample predictions")
+        pred = ctx.predictions
+        scores: dict[str, float] = {}
+        if ctx.y_eval is not None:
+            mse = float(jnp.mean((pred - ctx.y_eval) ** 2))
+            scores["mse"] = mse
+            scores["rmse"] = mse ** 0.5
+        if ctx.f_star is not None:
+            scores["risk"] = float(jnp.mean((pred - ctx.f_star) ** 2))
+        ctx.scores = scores
 
 
 def default_stages(config: Any = None) -> list[Stage]:
@@ -249,6 +342,12 @@ def default_stages(config: Any = None) -> list[Stage]:
     solve.  Per-stage overrides come from constructing the stages yourself."""
     del config  # stages read the config from the context at run time
     return [DensityStage(), LeverageStage(), SampleStage(), SolveStage()]
+
+
+def evaluate_stages(config: Any = None) -> list[Stage]:
+    """default_stages + in-sample predict/score — one fold from raw data to
+    risk numbers (`SAKRRPipeline.evaluate`, bench --stages score)."""
+    return default_stages(config) + [PredictStage(), ScoreStage()]
 
 
 def run_stages(stages: Sequence[Stage], ctx: StageContext,

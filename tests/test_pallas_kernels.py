@@ -33,9 +33,6 @@ from repro.kernels.ssd import ref as ssd_ref
                                            ("matern", 2.5, 1.0),
                                            ("gaussian", 0.0, 0.7)])
 def test_pairwise_matches_ref(n, m, d, kind, nu, sigma):
-    if (n, m, d, kind, nu) == (16, 300, 1, "matern", 0.5):
-        pytest.xfail("seed-inherited: interpret-mode tolerance at d=1 "
-                     "(fails identically on the seed commit; see ROADMAP)")
     kx, ky = jax.random.split(jax.random.PRNGKey(n * 7 + m))
     x = jax.random.normal(kx, (n, d), dtype=jnp.float32)
     y = jax.random.normal(ky, (m, d), dtype=jnp.float32)

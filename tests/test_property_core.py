@@ -9,6 +9,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import kernels as K, leverage, nystrom, polylog, quadrature
+from repro.core import sampling
 
 SETTINGS = dict(max_examples=15, deadline=None)
 
@@ -66,6 +67,58 @@ def test_polylog_monotone_nonnegative(s, seed):
     f = np.asarray(polylog.neg_polylog(s, x))
     assert np.all(f >= -1e-7)
     assert np.all(np.diff(f) >= -1e-6)
+
+
+# -- weighted without-replacement sampling (fuzzed versions of the
+# -- deterministic instances in tests/test_sampling_weights.py) --------------
+
+_WSAMPLE_N, _WSAMPLE_M, _WSAMPLE_R = 6, 3, 4096
+_wsample_probs = st.lists(st.floats(0.2, 1.0), min_size=_WSAMPLE_N,
+                          max_size=_WSAMPLE_N).map(
+    lambda raw: (np.asarray(raw, np.float32) / np.sum(raw)).astype(np.float32))
+
+
+@given(q=_wsample_probs, seed=st.integers(0, 2**31 - 1),
+       m=st.integers(1, _WSAMPLE_N))
+@settings(**SETTINGS)
+def test_weighted_sample_distinct_and_inverse_inclusion_scale(q, seed, m):
+    idx, w = sampling.sample_weighted_without_replacement(
+        jax.random.PRNGKey(seed), jnp.asarray(q), m)
+    assert len(np.unique(np.asarray(idx))) == m
+    assert np.all(np.asarray(w) >= 1.0)   # inverse inclusion probabilities
+    if m == _WSAMPLE_N:                   # certain inclusion: exactly 1
+        np.testing.assert_allclose(np.asarray(w), 1.0)
+
+
+@given(q=_wsample_probs)
+@settings(max_examples=5, deadline=None)
+def test_weighted_sample_unbiased_inclusion_estimator(q):
+    """E[1{i in S} w_i] ~ 1 for every i — the weights are (approximately)
+    unbiased inverse-inclusion estimates, matching the exact Plackett-Luce
+    inclusion probabilities enumerated in tests/test_sampling_weights.py."""
+    from test_sampling_weights import _mc_stats, pl_inclusion
+    pi = pl_inclusion(q, _WSAMPLE_M)
+    freq, wacc = _mc_stats(q)
+    np.testing.assert_allclose(freq, pi, atol=0.04)
+    np.testing.assert_allclose(wacc, 1.0, atol=0.10)
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 10.0))
+@settings(max_examples=8, deadline=None)
+def test_weighted_sor_invariant_to_weight_rescaling(seed, scale):
+    """Fuzzed form of the SoR weight-rescaling regression: any positive
+    rescaling of the landmark weights leaves the predictor unchanged."""
+    kern = K.Matern(nu=1.5)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (80, 2))
+    y = jnp.sin(3.0 * x[:, 0]) + 0.1 * jax.random.normal(key, (80,))
+    idx = jnp.arange(0, 80, 5)
+    w = 1.0 + jax.random.uniform(jax.random.fold_in(key, 1), (16,)) * 4.0
+    f1 = nystrom.fitted(kern, nystrom.fit_from_landmarks(
+        kern, x, y, 1e-3, idx, weights=w), x)
+    f2 = nystrom.fitted(kern, nystrom.fit_from_landmarks(
+        kern, x, y, 1e-3, idx, weights=scale * w), x)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=5e-2)
 
 
 @given(seed=st.integers(0, 2**31 - 1))

@@ -15,7 +15,7 @@ def test_projection_estimator_exact_with_full_sketch():
     data = krr_data.uniform(jax.random.PRNGKey(0), n)
     lam = 1e-3
     exact = krr.exact_leverage(KERN, data.x, lam)
-    est = rls._projection_leverage(
+    est = rls.projection_leverage(
         KERN, data.x, data.x, jnp.ones(n), mu=n * lam, jitter=0.0
     )
     np.testing.assert_allclose(
