@@ -114,6 +114,92 @@ def bench_one(n: int, tile: int, m: int | None, seed: int = 0,
     return rec
 
 
+# ---------------------------------------------------------------- calibrate --
+
+def calibrate_bench(n: int = 16_384, seed: int = 0) -> list[dict]:
+    """Sweep-vs-naive economics of the CalibrateStage fold at one n.
+
+    Times the shared-Gram multi-lam path (`nystrom.fit_streaming_multi`:
+    one row-stream accumulation + L whitened solves + one multi-beta
+    predict) against the naive per-lam refit loop (L independent
+    `fit_streaming` + `predict_streaming` calls) on the SAME landmark set
+    and lam grid, then runs the full `SAKRRPipeline.calibrate` fold and
+    compares the winning candidate's risk against the paper-rate default.
+    Both timed paths are jit-warmed first; the speedup row is the headline
+    number (>= 3x at n=16k is the acceptance bar — the Gram accumulation
+    dominates and is paid once instead of L times).
+    """
+    from repro.pipeline.stages import DEFAULT_LAM_FACTORS
+
+    data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
+    cfg = PipelineConfig(nu=1.5)
+    kern = cfg.build_kernel()
+    lam0 = cfg.resolve_lam(n)
+    m = cfg.resolve_num_landmarks(n)
+    lam_grid = [f * lam0 for f in DEFAULT_LAM_FACTORS]
+    n_val = int(cfg.calibrate_val_fraction * n)
+    x_tr, y_tr = data.x[n_val:], data.y[n_val:]
+    x_val = data.x[:n_val]
+    key = jax.random.PRNGKey(seed + 1)
+    idx, _ = sampling.sample_weighted_without_replacement(
+        key, rls.uniform(n - n_val).probs, m)
+
+    # warm every jit cache both timed regions hit (same shapes)
+    warm = nystrom.fit_streaming_multi(kern, x_tr, y_tr, lam_grid, idx,
+                                       tile=cfg.tile)
+    jax.block_until_ready(nystrom.predict_streaming_multi(
+        kern, warm, x_val, tile=cfg.tile))
+    w1 = nystrom.fit_streaming(kern, x_tr, y_tr, lam_grid[0], idx,
+                               tile=cfg.tile)
+    jax.block_until_ready(nystrom.predict_streaming(kern, w1, x_val,
+                                                    tile=cfg.tile))
+
+    t0 = time.perf_counter()
+    fits = nystrom.fit_streaming_multi(kern, x_tr, y_tr, lam_grid, idx,
+                                       tile=cfg.tile)
+    preds = nystrom.predict_streaming_multi(kern, fits, x_val, tile=cfg.tile)
+    jax.block_until_ready(preds)
+    sweep_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for lam in lam_grid:
+        f = nystrom.fit_streaming(kern, x_tr, y_tr, lam, idx, tile=cfg.tile)
+        jax.block_until_ready(nystrom.predict_streaming(kern, f, x_val,
+                                                        tile=cfg.tile))
+    naive_s = time.perf_counter() - t0
+    speedup = naive_s / max(sweep_s, 1e-9)
+
+    # full calibrate fold (lam x h grid) vs the paper-rate default
+    n_eval = min(n, 50_000)
+    pipe = SAKRRPipeline(cfg)
+    t0 = time.perf_counter()
+    cal = pipe.calibrate(data.x, data.y, x_eval=data.x[:n_eval],
+                         y_eval=data.y[:n_eval],
+                         f_star=data.f_star[:n_eval])
+    cal_s = time.perf_counter() - t0
+    ref = SAKRRPipeline(cfg).evaluate(
+        data.x, data.y, x_eval=data.x[:n_eval], y_eval=data.y[:n_eval],
+        f_star=data.f_star[:n_eval])
+    rec = {
+        "section": "pipeline_calibrate", "n": n, "m": m,
+        "lam_grid": [float(l) for l in lam_grid],
+        "sweep_seconds": round(sweep_s, 4),
+        "naive_refit_seconds": round(naive_s, 4),
+        "sweep_speedup": round(speedup, 2),
+        "best_lam": cal["lam"], "best_h": cal["bandwidth"],
+        "cv_candidates": len(cal["cv_scores"]),
+        "calibrate_seconds": round(cal_s, 4),
+        "risk_calibrated": cal["scores"].get("risk"),
+        "risk_paper_rate": ref.get("risk"),
+    }
+    print(f"lam sweep (L={len(lam_grid)}): shared-Gram {sweep_s:.3f}s vs "
+          f"naive refits {naive_s:.3f}s -> {speedup:.1f}x")
+    print(f"calibrated (lam={cal['lam']:.3e}, h={cal['bandwidth']:.3g}) "
+          f"risk {rec['risk_calibrated']:.3e} vs paper-rate "
+          f"{rec['risk_paper_rate']:.3e}")
+    return [rec]
+
+
 # ------------------------------------------------------------------ compare --
 
 def compare_methods(n: int = 16_384, m: int | None = None,
@@ -198,8 +284,12 @@ def compare_methods(n: int = 16_384, m: int | None = None,
 
 def main(json_out: str | None = "BENCH_pipeline.json",
          n_max: int = 262_144, n_only: int | None = None,
-         stages: list[str] | None = None, compare: bool = False) -> None:
-    if compare:
+         stages: list[str] | None = None, compare: bool = False,
+         calibrate: bool = False) -> None:
+    if calibrate:
+        print("\n## pipeline calibrate (shared-Gram sweep vs naive refits)")
+        records = calibrate_bench(n=n_only or 16_384)
+    elif compare:
         print("\n## pipeline compare (SA vs uniform vs RC vs BLESS)")
         records = compare_methods(n=n_only or 16_384)
     else:
@@ -234,8 +324,12 @@ if __name__ == "__main__":
     ap.add_argument("--compare", action="store_true",
                     help="SA vs uniform vs recursive-RLS vs BLESS risk/time "
                          "table (weighted projection estimator)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="CalibrateStage sweep economics: shared-Gram "
+                         "multi-lam sweep vs naive per-lam refits, plus the "
+                         "full (lam, h) calibrate fold vs paper-rate risk")
     ap.add_argument("--json", default="BENCH_pipeline.json")
     args = ap.parse_args()
     main(json_out=args.json or None, n_max=args.n_max, n_only=args.n,
          stages=args.stages.split(",") if args.stages else None,
-         compare=args.compare)
+         compare=args.compare, calibrate=args.calibrate)

@@ -93,17 +93,32 @@ def kde_binned_sharded(x: Array, h: float, *, grid_size: int = 96,
     """Paper-faithful Õ(n) KDE, sharded: the §Perf replacement for the
     O(n·m_kde) direct tile (see EXPERIMENTS.md §Perf cell C).
 
+    One-bandwidth wrapper over `kde_binned_sharded_multi` (identical ops for
+    a single h — the multi body's per-h loop degenerates to the historical
+    single-h body).  This is the KDE stage the pipeline
+    (`repro.pipeline.stages.DensityStage`) runs under an active mesh.
+    """
+    return kde_binned_sharded_multi(x, (h,), grid_size=grid_size, lo=lo,
+                                    hi=hi, tile=tile, backend=backend)[0]
+
+
+def kde_binned_sharded_multi(x: Array, hs, *, grid_size: int = 96,
+                             lo: Array | None = None, hi: Array | None = None,
+                             tile: int | None = None,
+                             backend: str | None = None) -> Array:
+    """Sharded binned KDE for a bandwidth GRID: (H, n) at one deposit+psum.
+
     shard_map body: stream LOCAL rows through the CIC deposit
     (`kernels.dispatch.binned_scatter` — windowed XLA scatter or the Pallas
     `kde_binned` kernel per `backend`, O(tile 2^d) transient per chip) into
-    a local copy of the (small, replicated) grid -> psum the grids across all mesh
-    axes -> identical FFT smoothing everywhere -> purely local multilinear
-    gather.  Per-chip bytes drop from O(n_loc * m_kde) to O(tile + g^d); the
-    only collective is the 3.5 MB grid psum.  Bounds (lo, hi) must be static
-    for jit; pass data bounds or rely on the caller's normalisation (default
-    [-5, 5]^d covers normalised designs).  This is the KDE stage the
-    pipeline (`repro.pipeline.stages.DensityStage`) runs under an active
-    mesh.
+    a local copy of the (small, replicated) grid -> psum the grids across
+    all mesh axes -> per-bandwidth FFT smoothing + purely local multilinear
+    gather.  The deposit and the grid psum are bandwidth-independent and run
+    ONCE for the whole sweep — the mesh half of the CalibrateStage contract
+    (a naive sweep would psum per candidate).  Per-chip bytes stay
+    O(tile + g^d); the only collective is the one grid psum.  Bounds
+    (lo, hi) must be static for jit; pass data bounds or rely on the
+    caller's normalisation (default [-5, 5]^d covers normalised designs).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -112,6 +127,9 @@ def kde_binned_sharded(x: Array, h: float, *, grid_size: int = 96,
 
     n, d = x.shape
     act = shd.active()
+    if (lo is None) != (hi is None):
+        raise ValueError("pass both lo and hi to pin the grid bounds, or "
+                         "neither for the [-5, 5]^d default")
     if lo is None:
         lo = jnp.full((d,), -5.0, x.dtype)
         hi = jnp.full((d,), 5.0, x.dtype)
@@ -121,18 +139,24 @@ def kde_binned_sharded(x: Array, h: float, *, grid_size: int = 96,
         from repro.kernels import dispatch
         grid = dispatch.binned_scatter(x_loc, lo, spacing, grid_size,
                                        backend=backend, tile=tile)
-        if psum_axes:   # only meaningful inside shard_map
+        if psum_axes:   # only meaningful inside shard_map; ONE psum per sweep
             grid = jax.lax.psum(grid, axis_name=psum_axes)
-        smooth = core_kde._fft_smooth(grid, spacing, jnp.asarray(h, x.dtype),
-                                      grid_size, d)
-        out = core_kde.gather_cic(smooth, x_loc, lo, spacing, grid_size)
-        return jnp.maximum(out, 0.0) / (n * core_kde.gaussian_norm(d, h))
+        outs = []
+        for h in hs:
+            smooth = core_kde._fft_smooth(grid, spacing,
+                                          jnp.asarray(h, x.dtype),
+                                          grid_size, d)
+            out = core_kde.gather_cic(smooth, x_loc, lo, spacing, grid_size)
+            outs.append(jnp.maximum(out, 0.0)
+                        / (n * core_kde.gaussian_norm(d, h)))
+        return jnp.stack(outs)
 
     if act is None or n % act.mesh.devices.size != 0:
         return body(x)   # single-device (or non-dividing n): no collective
     axes = tuple(act.mesh.axis_names)
     return shard_map(functools.partial(body, psum_axes=axes), mesh=act.mesh,
-                     in_specs=P(axes, None), out_specs=P(axes))(x)
+                     in_specs=P(axes, None),
+                     out_specs=P(None, axes))(x)
 
 
 def sa_nystrom_pipeline(

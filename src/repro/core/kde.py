@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -182,6 +183,8 @@ def kde_binned(
     h: float | Array,
     grid_size: int = 256,
     *,
+    lo: Array | None = None,
+    hi: Array | None = None,
     backend: str | None = None,
     tile: int | None = None,
     interpret: bool | None = None,
@@ -191,21 +194,59 @@ def kde_binned(
     backend/tile/interpret configure the deposit stage only (see
     `repro.kernels.dispatch.binned_scatter`): 'pallas' runs the tiled VMEM
     scatter kernel, 'xla' (CPU/GPU default) the windowed streaming scatter
-    with `tile` rows per scan step.
+    with `tile` rows per scan step.  lo/hi pin the grid bounds (default:
+    data bounds +-4h) — pass the bounds of a WIDER bandwidth to evaluate
+    several h on one shared grid (`kde_binned_multi` parity).
+    """
+    return kde_binned_multi(query, data, (h,), grid_size, lo=lo, hi=hi,
+                            backend=backend, tile=tile, interpret=interpret)[0]
+
+
+def kde_binned_multi(
+    query: Array,
+    data: Array,
+    hs: "Sequence[float | Array]",
+    grid_size: int = 256,
+    *,
+    lo: Array | None = None,
+    hi: Array | None = None,
+    backend: str | None = None,
+    tile: int | None = None,
+    interpret: bool | None = None,
+) -> Array:
+    """Binned KDE for a bandwidth GRID at one deposit cost: (H, n) densities.
+
+    The O(n 2^d) CIC deposit is bandwidth-independent once the grid geometry
+    is fixed, so a bandwidth sweep scatters the points ONCE and only re-runs
+    the O(g^d log g) FFT smooth + O(n 2^d) gather per h — the KDE half of
+    `pipeline.stages.CalibrateStage`'s shared-expensive-work contract.  Grid
+    bounds default to +-4·max(hs) margins (every candidate's support fits);
+    row i is bit-equal to `kde_binned(query, data, hs[i], lo=lo, hi=hi)` on
+    those bounds (same deposit, same per-h ops).
     """
     n, d = data.shape
     if d > 3:
         raise ValueError("kde_binned supports d <= 3; use kde_direct / Pallas kde")
-    h = jnp.asarray(h, dtype=data.dtype)
-    lo, hi = binned_bounds(query, data, h)
+    hs = [jnp.asarray(h, dtype=data.dtype) for h in hs]
+    if (lo is None) != (hi is None):
+        raise ValueError("pass both lo and hi to pin the grid bounds, or "
+                         "neither for the +-4*max(h) data bounds")
+    if lo is None:
+        h_max = hs[0]
+        for h in hs[1:]:
+            h_max = jnp.maximum(h_max, h)
+        lo, hi = binned_bounds(query, data, h_max)
     spacing = (hi - lo) / (grid_size - 1)
     from repro.kernels import dispatch  # deferred: core -> kernels at call time
     grid = dispatch.binned_scatter(data, lo, spacing, grid_size,
                                    backend=backend, tile=tile,
                                    interpret=interpret)
-    smooth = _fft_smooth(grid, spacing, h, grid_size, d)
-    out = gather_cic(smooth, query, lo, spacing, grid_size)
-    return jnp.maximum(out, 0.0) / (n * gaussian_norm(d, h))
+    outs = []
+    for h in hs:
+        smooth = _fft_smooth(grid, spacing, h, grid_size, d)
+        out = gather_cic(smooth, query, lo, spacing, grid_size)
+        outs.append(jnp.maximum(out, 0.0) / (n * gaussian_norm(d, h)))
+    return jnp.stack(outs)
 
 
 def default_grid_size(d: int) -> int:

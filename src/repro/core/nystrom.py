@@ -28,7 +28,7 @@ Two solve paths:
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +87,28 @@ def weighted_normal_eq(g: Array, rhs: Array, k_mm: Array,
             w[:, None] * k_mm.astype(g.dtype) * w[None, :])
 
 
+def _whitened_solve(g: Array, rhs: Array, evals: Array, evecs: Array,
+                    g_max: Array, n: int, lam: float, jitter: float) -> Array:
+    """The per-lam tail of `solve_normal_eq`: truncate + whiten + solve.
+
+    Takes the lam-INDEPENDENT eigendecomposition of K_mm (and the trace
+    upper bound on lambda_max(G)) as inputs, so a lam sweep pays the O(m^3)
+    eigh once and only re-runs this O(m^3-but-tiny) tail per candidate —
+    the op sequence per lam is identical to the single-lam solve, so the
+    sweep is bit-equal to per-lam solves (locked in tests/test_calibrate.py).
+    """
+    m = evals.shape[0]
+    eps = jnp.finfo(g.dtype).eps
+    tau = jnp.maximum(jitter * evals[-1], eps * g_max / (n * lam))
+    inv_sqrt = jnp.where(evals > tau, 1.0 / jnp.sqrt(jnp.maximum(evals, tau)),
+                         0.0)
+    w = evecs * inv_sqrt[None, :]                         # (m, m) whitener
+    a = w.T @ g @ w
+    b = w.T @ rhs
+    gamma = jnp.linalg.solve(a + n * lam * jnp.eye(m, dtype=a.dtype), b)
+    return w @ gamma
+
+
 def solve_normal_eq(g: Array, rhs: Array, k_mm: Array, n: int, lam: float,
                     jitter: float = 1e-6) -> Array:
     """beta = (G + n lam K_mm)^{-1} rhs via spectrally-truncated whitening.
@@ -109,21 +131,29 @@ def solve_normal_eq(g: Array, rhs: Array, k_mm: Array, n: int, lam: float,
     cutoff recedes and the solve is the textbook one.  Truncated directions
     are zeroed via masks, keeping every shape static (jit-safe).
     """
-    m = k_mm.shape[0]
     evals, evecs = jnp.linalg.eigh(k_mm)
     # trace >= lambda_max for PSD G, and is tight here (G's spectrum is
     # dominated by the near-constant kernel component) — O(m) vs an O(m^3)
     # eigendecomposition for a quantity that only needs an upper bound.
     g_max = jnp.trace(g)
-    eps = jnp.finfo(g.dtype).eps
-    tau = jnp.maximum(jitter * evals[-1], eps * g_max / (n * lam))
-    inv_sqrt = jnp.where(evals > tau, 1.0 / jnp.sqrt(jnp.maximum(evals, tau)),
-                         0.0)
-    w = evecs * inv_sqrt[None, :]                         # (m, m) whitener
-    a = w.T @ g @ w
-    b = w.T @ rhs
-    gamma = jnp.linalg.solve(a + n * lam * jnp.eye(m, dtype=a.dtype), b)
-    return w @ gamma
+    return _whitened_solve(g, rhs, evals, evecs, g_max, n, lam, jitter)
+
+
+def solve_normal_eq_multi(g: Array, rhs: Array, k_mm: Array, n: int,
+                          lams: Sequence[float],
+                          jitter: float = 1e-6) -> Array:
+    """`solve_normal_eq` over a lam grid, sharing the eigendecomposition.
+
+    The truncation cutoff tau depends on lam, so each candidate gets its own
+    whitener — but the K_mm eigh and the G trace are lam-independent and run
+    once.  Returns the (L, m) stack of betas, row i bit-equal to
+    `solve_normal_eq(g, rhs, k_mm, n, lams[i])` (same op sequence).
+    """
+    evals, evecs = jnp.linalg.eigh(k_mm)
+    g_max = jnp.trace(g)
+    return jnp.stack([
+        _whitened_solve(g, rhs, evals, evecs, g_max, n, float(lam), jitter)
+        for lam in lams])
 
 
 def fit_from_landmarks(
@@ -284,6 +314,93 @@ def fit_streaming(
         beta = weights.astype(beta.dtype) * beta
     return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx,
                       lam=lam)
+
+
+def fit_streaming_multi(
+    kernel: Kernel,
+    x: Array,
+    y: Array,
+    lams: Sequence[float],
+    landmark_idx: Array,
+    *,
+    tile: int = 8192,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    jitter: float = 1e-6,
+    weights: Array | None = None,
+) -> list[NystromFit]:
+    """`fit_streaming` over a lam grid at ONE Gram-accumulation cost.
+
+    G = K_nm^T K_nm and rhs = K_nm^T y are lam-independent, and so is the
+    weighted column rescaling — only the O(m^3) whitened solve depends on
+    lam.  So the sweep streams the rows once (one psum per array under an
+    active mesh, exactly like the single-lam fit) and re-solves per lam via
+    `solve_normal_eq_multi`.  Fit i is bit-equal to
+    `fit_streaming(kernel, x, y, lams[i], landmark_idx, ...)`; cost is
+    O(n m (d + m)) + L·O(m^3) instead of L·O(n m (d + m)) — the whole point
+    of `pipeline.stages.CalibrateStage`.
+    """
+    _require_sentinel_safe(kernel)
+    n = x.shape[0]
+    xm = jnp.take(x, landmark_idx, axis=0)
+    g, rhs = streaming_normal_eq(kernel, x, y, xm, tile=tile,
+                                 backend=backend, interpret=interpret)
+    k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
+    if weights is not None:
+        g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
+    betas = solve_normal_eq_multi(g, rhs, k_mm, n, lams, jitter=jitter)
+    if weights is not None:
+        betas = weights.astype(betas.dtype)[None, :] * betas
+    return [NystromFit(beta=betas[i], landmarks=xm, landmark_idx=landmark_idx,
+                       lam=float(lam)) for i, lam in enumerate(lams)]
+
+
+def predict_streaming_multi(kernel: Kernel, fits: Sequence[NystromFit],
+                            x_new: Array, *, tile: int = 8192,
+                            backend: str | None = None) -> Array:
+    """Batched predict for several fits SHARING one landmark set: (L, n_new).
+
+    The kernel tile K(x_tile, X_m) is the expensive part of a predict and is
+    beta-independent, so a lam sweep evaluates it once per tile and applies
+    all betas as one (tile, m) x (m, L) matmul.  All fits must share
+    `landmarks` (the CalibrateStage invariant); mesh behavior matches
+    `predict_streaming` (purely local row slabs).
+    """
+    from repro.distributed import sharding as shd
+    from repro.kernels import dispatch
+
+    _require_sentinel_safe(kernel)
+    n, d = x_new.shape
+    betas = jnp.stack([f.beta for f in fits], axis=1)     # (m, L)
+    xm = fits[0].landmarks
+
+    def local(x_loc, xm, betas):
+        n_loc = x_loc.shape[0]
+        t = min(tile, n_loc)
+        np_ = round_up(n_loc, t)
+        tiles = pad_rows_sentinel(x_loc, np_).reshape(np_ // t, t, d)
+
+        def one(xt):
+            return dispatch.kernel_matrix(kernel, xt, xm,
+                                          backend=backend) @ betas  # (t, L)
+
+        out = jax.lax.map(one, tiles).reshape(np_, betas.shape[1])
+        return out[:n_loc]
+
+    act = shd.active()
+    if act is not None:
+        row_axes = act.spec(("rows", None), x_new.shape)[0]
+        if row_axes is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            out = shard_map(
+                local, mesh=act.mesh,
+                in_specs=(P(row_axes, None), P(None, None), P(None, None)),
+                out_specs=P(row_axes, None),
+            )(x_new, xm, betas)
+            return out.T
+    return local(x_new, xm, betas).T
 
 
 def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,

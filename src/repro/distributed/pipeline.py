@@ -41,7 +41,11 @@ def gpipe(layer_fn: Callable, stage_params, x: Array, *, mesh: Mesh,
     def _varying(v):  # mark as device-varying for the scan carry typing
         if hasattr(jax.lax, "pcast"):
             return jax.lax.pcast(v, (axis,), to="varying")
-        return jax.lax.pvary(v, (axis,))
+        if hasattr(jax.lax, "pvary"):
+            return jax.lax.pvary(v, (axis,))
+        # older jax (no varying-manual-axes typing): the scan carry needs no
+        # annotation; shard_map's replication checker accepts it as-is
+        return v
 
     def body(local_params, xs):
         lp = jax.tree.map(lambda a: a[0], local_params)  # this stage's params

@@ -82,6 +82,11 @@ def binned_scatter(data: Array, lo: Array, spacing: Array, grid_size: int,
     scatter-add in `repro.core.kde.scatter_cic` (one update per point, a
     lax.scan over `tile`-row slabs).  Both match the corner-loop oracle
     `repro.kernels.kde_binned.ref.binned_grid` to reduction-order tolerance.
+
+    The deposit is bandwidth-independent (only the grid geometry enters),
+    which is why `kde.kde_binned_multi` / the CalibrateStage bandwidth sweep
+    call this ONCE per grid and amortize it across every h candidate — keep
+    that contract if you add state to either backend.
     """
     if resolve(backend) == "pallas":
         from repro.kernels.kde_binned import ops as kb_ops

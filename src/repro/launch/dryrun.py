@@ -100,7 +100,7 @@ def _cell_costs(cfg: ModelConfig, shape: ShapeSpec,
     """flops / bytes / collective-bytes of one compiled variant (per device)."""
     fn, args = step_and_args(cfg, shape, hp)
     compiled = jax.jit(fn).lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = roofline.cost_dict(compiled)
     coll = roofline.collective_bytes(compiled.as_text() or "")
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -238,7 +238,7 @@ def run_krr_cell(mesh_name: str, out_dir: str | None, n: int = 1 << 24,
     t0 = time.perf_counter()
     lowered, compiled = D.lower_pipeline(mesh, n=n, d=d, m=m, m_kde=m_kde,
                                          kde_method=kde_method)
-    cost = compiled.cost_analysis() or {}
+    cost = roofline.cost_dict(compiled)
     coll = roofline.collective_bytes(compiled.as_text() or "")
     try:
         mem_str = str(compiled.memory_analysis())

@@ -15,6 +15,7 @@ from repro.pipeline.api import (  # noqa: F401
     SAKRRPipeline,
 )
 from repro.pipeline.stages import (  # noqa: F401
+    CalibrateStage,
     DensityStage,
     FixedLandmarkStage,
     LeverageStage,

@@ -34,6 +34,11 @@ workloads — precomputed densities, fixed landmarks, KDE-only benchmarking):
 overrides and wall-clock seconds follow the same contract), and
 `evaluate(x, y, f_star=...)` folds all six stages in one `run_stages` pass —
 the entry point that measures the paper's §4.1 claim end-to-end.
+`calibrate(x, y, ...)` prepends a `stages.CalibrateStage`: a one-fold
+(lam, h) grid sweep whose Gram accumulation is shared across the lam grid
+and whose KDE deposit is shared across the bandwidth grid (see the stage
+docstring and pipeline/README.md "Tuning λ and h"), rewriting lam/bandwidth
+for the full-data refit that follows in the same fold.
 
 Each stage records its wall-clock seconds in `state.seconds`, so benchmarks
 (benchmarks/bench_pipeline.py, incl. `--stages kde`/`--stages score`
@@ -73,9 +78,17 @@ class PipelineConfig:
     # leverage estimation
     leverage_method: str = "closed_form"   # closed_form | grid | quadrature
     kde_method: str = "auto"               # auto | binned | direct
+    kde_bandwidth: float | None = None     # fixed h; None -> Scott's rule
     kde_grid_size: int | None = None
     kde_tile: int | None = None            # rows per streaming scatter slab
     density_floor: float | None = None
+    # calibration (CalibrateStage / SAKRRPipeline.calibrate): explicit
+    # candidate grids, or None for the default factor grids bracketing the
+    # paper-rate lam and Scott's-rule h (stages.DEFAULT_LAM_FACTORS/
+    # DEFAULT_H_FACTORS)
+    lam_grid: tuple[float, ...] | None = None
+    h_grid: tuple[float, ...] | None = None
+    calibrate_val_fraction: float = 0.2    # holdout share of the one CV fold
     # sampling
     sample_with_replacement: bool = False  # paper Thm 2 iid mode when True
     # execution
@@ -125,6 +138,9 @@ class PipelineState:
     sample_weights: Optional[Array] = None  # (m,) inverse-inclusion weights
     predictions: Optional[Array] = None     # (n_eval,) PredictStage output
     scores: Optional[dict[str, float]] = None  # ScoreStage metrics
+    bandwidth: Optional[float] = None       # calibrated KDE h (CalibrateStage)
+    cv_scores: Optional[list] = None        # per-(lam, h) candidate records
+    cv_best: Optional[dict] = None          # winning candidate summary
 
 
 class SAKRRPipeline:
@@ -161,7 +177,9 @@ class SAKRRPipeline:
             n=ctx.n, d=ctx.d, lam=ctx.lam, num_landmarks=ctx.num_landmarks,
             densities=ctx.densities, leverage=ctx.leverage, fit=ctx.fit,
             seconds=ctx.seconds, sample_weights=ctx.sample_weights,
-            predictions=ctx.predictions, scores=ctx.scores)
+            predictions=ctx.predictions, scores=ctx.scores,
+            bandwidth=ctx.bandwidth, cv_scores=ctx.cv_scores,
+            cv_best=ctx.cv_best)
 
     def fit(self, x: Array, y: Array) -> "SAKRRPipeline":
         ctx = self._make_context(x, y)
@@ -187,6 +205,13 @@ class SAKRRPipeline:
         """
         ctx = self._make_context(x, y, x_eval=x_eval, y_eval=y_eval,
                                  f_star=f_star)
+        stages_mod.run_stages(self._completed_eval_stages(), ctx)
+        self._snapshot(ctx)
+        return dict(ctx.scores or {})
+
+    def _completed_eval_stages(self) -> list[stages_mod.Stage]:
+        """self.stages COMPLETED to a scoring fold (Predict/Score appended
+        when missing — shared by evaluate() and calibrate())."""
         eval_stages = list(self.stages)
         if not any(isinstance(s, stages_mod.PredictStage)
                    for s in eval_stages):
@@ -199,9 +224,37 @@ class SAKRRPipeline:
                 backend=self._predict_backend(), tile=self._predict_tile()))
         if not any(isinstance(s, stages_mod.ScoreStage) for s in eval_stages):
             eval_stages.append(stages_mod.ScoreStage())
-        stages_mod.run_stages(eval_stages, ctx)
+        return eval_stages
+
+    # ------------------------------------------------------------ calibrate --
+    def calibrate(self, x: Array, y: Array, *, f_star: Array | None = None,
+                  x_eval: Array | None = None, y_eval: Array | None = None
+                  ) -> dict[str, Any]:
+        """One-fold (lam, h) sweep, then the full evaluate fold at the winner.
+
+        Prepends a `CalibrateStage` (unless the stage list already has one)
+        to the completed evaluate fold: the stage sweeps
+        `config.lam_grid` x `config.h_grid` (default factor grids around the
+        paper rate / Scott's rule) through ONE shared-expensive-work holdout
+        fold — one Gram accumulation per h re-solved per lam, one KDE
+        deposit for all h — then rewrites ctx.lam/ctx.bandwidth so the
+        stages after it refit the FULL data at the best candidate.
+
+        Returns {"lam", "bandwidth", "val_mse", "cv_scores", "scores"}; the
+        fitted artifacts and per-candidate seconds land on `self.state` like
+        fit's do (state.cv_scores / state.cv_best / state.lam).
+        """
+        ctx = self._make_context(x, y, x_eval=x_eval, y_eval=y_eval,
+                                 f_star=f_star)
+        cal_stages = self._completed_eval_stages()
+        if not any(isinstance(s, stages_mod.CalibrateStage)
+                   for s in cal_stages):
+            cal_stages.insert(0, stages_mod.CalibrateStage(
+                backend=self._predict_backend(), tile=self._predict_tile()))
+        stages_mod.run_stages(cal_stages, ctx)
         self._snapshot(ctx)
-        return dict(ctx.scores or {})
+        return dict(ctx.cv_best or {}, cv_scores=ctx.cv_scores,
+                    scores=dict(ctx.scores or {}))
 
     # -------------------------------------------------------------- predict --
     def _predict_backend(self) -> str | None:

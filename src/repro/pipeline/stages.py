@@ -30,6 +30,7 @@ row stream; with no mesh both run single-device, same numbers.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Optional, Sequence
 
@@ -57,11 +58,16 @@ class StageContext:
     d: int
     lam: float
     num_landmarks: int
+    bandwidth: Optional[float] = None       # KDE h; None -> Scott's rule
     densities: Optional[Array] = None
     leverage: Optional[leverage.SALeverage] = None
     landmark_idx: Optional[Array] = None
     sample_weights: Optional[Array] = None
     fit: Optional[nystrom.NystromFit] = None
+    # calibration outputs (CalibrateStage): per-candidate records + the
+    # winning (lam, bandwidth) pair (which also rewrites lam/bandwidth above)
+    cv_scores: Optional[list] = None
+    cv_best: Optional[dict] = None
     # evaluation inputs (PredictStage/ScoreStage): default to in-sample
     x_eval: Optional[Array] = None          # defaults to x
     y_eval: Optional[Array] = None          # observed targets at x_eval
@@ -123,10 +129,11 @@ class DensityStage(Stage):
     name = "kde"
     provides = ("densities",)
 
-    def __init__(self, *, method: str | None = None,
+    def __init__(self, *, method: str | None = None, h: float | None = None,
                  grid_size: int | None = None, backend: str | None = None,
                  tile: int | None = None, sharded: bool | None = None):
         self.method = method
+        self.h = h
         self.grid_size = grid_size
         self.backend = backend
         self.tile = tile
@@ -141,20 +148,26 @@ class DensityStage(Stage):
                      or kde.default_grid_size(ctx.d))
         backend = self.backend if self.backend is not None else _backend(cfg)
         tile = self.tile if self.tile is not None else cfg.kde_tile
+        # bandwidth resolution: stage override > calibrated ctx.bandwidth >
+        # config > Scott's rule (the pre-calibration default)
+        h = self.h if self.h is not None else ctx.bandwidth
+        if h is None:
+            h = getattr(cfg, "kde_bandwidth", None)
         act = shd.active()
         use_sharded = (self.sharded if self.sharded is not None
                        else act is not None)
         if method == "binned" and use_sharded and act is not None:
             from repro.core import distributed as dist
-            h = jnp.asarray(kde.scott_bandwidth(ctx.x), ctx.x.dtype)
+            h = jnp.asarray(h if h is not None
+                            else kde.scott_bandwidth(ctx.x), ctx.x.dtype)
             lo, hi = kde.binned_bounds(ctx.x, ctx.x, h)
             ctx.densities = dist.kde_binned_sharded(
                 ctx.x, h, grid_size=grid_size, lo=lo, hi=hi, tile=tile,
                 backend=backend)
         else:
             ctx.densities = kde.estimate_densities(
-                ctx.x, method=method, grid_size=grid_size, backend=backend,
-                tile=tile)
+                ctx.x, h=h, method=method, grid_size=grid_size,
+                backend=backend, tile=tile)
 
 
 class PrecomputedDensityStage(Stage):
@@ -335,6 +348,195 @@ class ScoreStage(Stage):
         if ctx.f_star is not None:
             scores["risk"] = float(jnp.mean((pred - ctx.f_star) ** 2))
         ctx.scores = scores
+
+
+# ----------------------------------------------------------- calibration --
+
+# Default grids when neither the stage nor the config pins them: lam
+# candidates bracket the paper's asymptotic rate symmetrically in log space,
+# bandwidth candidates bracket Scott's rule.  Both contain the 1.0 factor,
+# so the paper-rate default is always IN the swept set — calibration can
+# only match or beat it on the validation fold.
+DEFAULT_LAM_FACTORS = (0.1, 0.3, 1.0, 3.0, 10.0)
+DEFAULT_H_FACTORS = (0.5, 1.0, 2.0)
+
+
+class CalibrateStage(Stage):
+    """One-fold (lam, h) cross-validation with SHARED expensive work.
+
+    The sweep's costs factor exactly:
+
+      * the tiled Gram ``K_nm^T K_nm`` / moments are lam-independent, so each
+        bandwidth candidate accumulates them ONCE and re-solves the whitened
+        normal equations per lam (`nystrom.fit_streaming_multi` — bit-equal
+        to per-lam `fit_streaming` loops, at 1/L of the row-stream cost);
+      * the binned-KDE CIC deposit is h-independent on a fixed grid, so the
+        whole bandwidth grid shares ONE deposit and only the FFT smooth +
+        gather re-run per h (`kde.kde_binned_multi`;
+        `core.distributed.kde_binned_sharded_multi` under an active mesh —
+        one deposit AND one grid psum for the whole sweep);
+      * validation predictions share the kernel tiles across lam
+        (`nystrom.predict_streaming_multi`).
+
+    So an H x L sweep costs ~H fits + one KDE instead of H·L of each.  The
+    fold: a deterministic holdout split (``val_fraction``, seeded by the
+    config; the train side is rounded to divide an active mesh so the Gram
+    psum stays sharded), per-h densities -> SA leverage at the reference
+    ctx.lam -> one landmark draw (same key every h: candidates differ by
+    their OWN knob, not sampling noise) -> multi-lam fit -> multi-lam
+    validation MSE.  Emits `ctx.cv_scores` (one record per (h, lam) with
+    val_mse/val_rmse and the per-h fit/block seconds), `ctx.cv_best`, and
+    REWRITES ``ctx.lam`` / ``ctx.bandwidth`` so every downstream stage
+    (DensityStage reads ctx.bandwidth, Leverage/SolveStage read ctx.lam)
+    refits the full data at the winning candidate.  Per-h wall-clock lands
+    in ``ctx.seconds["calibrate[h=...]"]`` next to the stage total.
+    """
+
+    name = "calibrate"
+    provides = ("cv_scores",)
+
+    def __init__(self, *, lam_grid: Sequence[float] | None = None,
+                 h_grid: Sequence[float] | None = None,
+                 val_fraction: float | None = None,
+                 backend: str | None = None, tile: int | None = None,
+                 weighted: bool = False):
+        self.lam_grid = lam_grid
+        self.h_grid = h_grid
+        self.val_fraction = val_fraction
+        self.backend = backend
+        self.tile = tile
+        self.weighted = weighted
+
+    # ------------------------------------------------------------ helpers --
+    def _grids(self, ctx: StageContext) -> tuple[list[float], list[float]]:
+        cfg = ctx.config
+        lam_grid = self.lam_grid or getattr(cfg, "lam_grid", None)
+        if lam_grid is None:
+            lam_grid = [f * ctx.lam for f in DEFAULT_LAM_FACTORS]
+        h_grid = self.h_grid or getattr(cfg, "h_grid", None)
+        if h_grid is None:
+            # bracket the user-pinned bandwidth when one is configured (so
+            # the configured candidate is always IN the swept set and can
+            # only be beaten, never silently discarded), else Scott's rule
+            h0 = getattr(cfg, "kde_bandwidth", None)
+            h0 = float(h0) if h0 is not None else float(
+                kde.scott_bandwidth(ctx.x))
+            h_grid = [f * h0 for f in DEFAULT_H_FACTORS]
+        return [float(l) for l in lam_grid], [float(h) for h in h_grid]
+
+    def _split(self, ctx: StageContext) -> tuple[Array, Array]:
+        """Deterministic holdout (train_idx, val_idx); the train side is
+        shrunk (val grows) until it divides an active mesh, so the shared
+        Gram/deposit run sharded with their single psum."""
+        from repro.distributed import sharding as shd
+        cfg = ctx.config
+        frac = (self.val_fraction if self.val_fraction is not None
+                else getattr(cfg, "calibrate_val_fraction", 0.2))
+        n_val = min(ctx.n - 1, max(1, int(frac * ctx.n)))
+        act = shd.active()
+        if act is not None:
+            size = act.mesh.devices.size
+            n_tr = ctx.n - n_val
+            if n_tr > size:    # else: leave it; the kernels fall back local
+                n_val += n_tr % size
+        perm = jax.random.permutation(jax.random.PRNGKey(cfg.seed ^ 0x5EED),
+                                      ctx.n)
+        return perm[n_val:], perm[:n_val]
+
+    def _densities_multi(self, ctx: StageContext, x_tr: Array,
+                         h_grid: list[float]) -> Array:
+        """(H, n_tr) densities at every bandwidth, one deposit (+ one psum
+        under a mesh); direct KDE (d > 3) has no shareable deposit and just
+        loops."""
+        from repro.distributed import sharding as shd
+        cfg = ctx.config
+        method = _resolve_kde_method(cfg.kde_method, ctx.d)
+        if method != "binned":
+            return jnp.stack([kde.kde_direct(x_tr, x_tr, h) for h in h_grid])
+        grid_size = cfg.kde_grid_size or kde.default_grid_size(ctx.d)
+        backend = self.backend if self.backend is not None else _backend(cfg)
+        tile = cfg.kde_tile
+        h_max = jnp.asarray(max(h_grid), x_tr.dtype)
+        lo, hi = kde.binned_bounds(x_tr, x_tr, h_max)
+        if shd.active() is not None:
+            from repro.core import distributed as dist
+            return dist.kde_binned_sharded_multi(
+                x_tr, h_grid, grid_size=grid_size, lo=lo, hi=hi, tile=tile,
+                backend=backend)
+        return kde.kde_binned_multi(x_tr, x_tr, h_grid, grid_size,
+                                    lo=lo, hi=hi, backend=backend, tile=tile)
+
+    # ---------------------------------------------------------------- run --
+    def run(self, ctx: StageContext) -> None:
+        cfg = ctx.config
+        lam_grid, h_grid = self._grids(ctx)
+        tr_idx, val_idx = self._split(ctx)
+        x_tr, y_tr = ctx.x[tr_idx], ctx.y[tr_idx]
+        x_val, y_val = ctx.x[val_idx], ctx.y[val_idx]
+        n_tr = int(x_tr.shape[0])
+        tile = self.tile if self.tile is not None else cfg.tile
+        backend = self.backend if self.backend is not None else _backend(cfg)
+
+        t0 = time.perf_counter()
+        dens = self._densities_multi(ctx, x_tr, h_grid)
+        jax.block_until_ready(dens)
+        kde_s = time.perf_counter() - t0
+
+        key = jax.random.PRNGKey(cfg.seed)
+        records: list[dict] = []
+        for i, h in enumerate(h_grid):
+            t_h = time.perf_counter()
+            lev = leverage.sa_leverage(
+                dens[i], ctx.lam, ctx.kernel, ctx.d, n=n_tr,
+                method=cfg.leverage_method, floor=cfg.density_floor)
+            # top-k needs m DISTINCT train points to exist, so the fallback
+            # tests the unclamped request (SampleStage semantics) while the
+            # draw itself is clamped to the fold's size
+            m = min(ctx.num_landmarks, n_tr)
+            if cfg.sample_with_replacement or ctx.num_landmarks > n_tr:
+                idx = sampling.sample_with_replacement(key, lev.probs, m)
+                weights = None
+            else:
+                idx, weights = sampling.sample_weighted_without_replacement(
+                    key, lev.probs, m)
+            t1 = time.perf_counter()
+            fits = nystrom.fit_streaming_multi(
+                ctx.kernel, x_tr, y_tr, lam_grid, idx,
+                tile=tile, backend=backend, jitter=cfg.jitter,
+                weights=weights if self.weighted else None)
+            jax.block_until_ready(fits[0].beta)
+            fit_s = time.perf_counter() - t1
+            preds = nystrom.predict_streaming_multi(ctx.kernel, fits, x_val,
+                                                    tile=tile,
+                                                    backend=backend)
+            val_mse = jnp.mean((preds - y_val[None, :]) ** 2, axis=1)
+            val_mse = [float(v) for v in val_mse]
+            h_s = time.perf_counter() - t_h
+            sec_key = f"calibrate[h={h:.3g}]"
+            if sec_key in ctx.seconds:   # grid values equal at 3 sig figs
+                sec_key = f"calibrate[h={h:.3g}#{i}]"
+            ctx.seconds[sec_key] = h_s
+            for lam, mse in zip(lam_grid, val_mse):
+                records.append({
+                    "h": float(h), "lam": float(lam), "val_mse": mse,
+                    "val_rmse": mse ** 0.5, "fit_seconds": round(fit_s, 4),
+                    "h_block_seconds": round(h_s, 4), "best": False})
+        ctx.seconds["calibrate[kde]"] = kde_s
+
+        # non-finite val_mse (a diverged candidate) must never win min():
+        # NaN compares False against everything, so key on finiteness first
+        best = min(records, key=lambda r: (not math.isfinite(r["val_mse"]),
+                                           r["val_mse"]))
+        best["best"] = True
+        ctx.cv_scores = records
+        ctx.cv_best = {"lam": best["lam"], "bandwidth": best["h"],
+                       "val_mse": best["val_mse"]}
+        # rewrite the downstream knobs: the full-data refit (DensityStage
+        # onward) now runs at the calibrated candidate
+        ctx.lam = best["lam"]
+        ctx.bandwidth = best["h"]
+        ctx.densities = ctx.leverage = ctx.landmark_idx = None
+        ctx.sample_weights = ctx.fit = ctx.predictions = ctx.scores = None
 
 
 def default_stages(config: Any = None) -> list[Stage]:

@@ -166,9 +166,25 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n_active * shape.global_batch  # decode: 1 token per seq
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() normalized to ONE flat dict.
+
+    The return type changed across jax versions: older releases return a
+    list with one dict per executable (always length 1 for a jit'd program),
+    newer ones return the dict directly, and some backends return None.
+    Every consumer here wants the flat {"flops": ..., "bytes accessed": ...}
+    mapping, so normalize once instead of hand-rolling `.get` on a list
+    (the exact crash the seed's dry-run/lowering tests inherited).
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def analyze(arch: str, shape, cfg, mesh_name: str, chips: int,
             compiled, hlo_text: str) -> Roofline:
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
     coll = collective_bytes(hlo_text)

@@ -35,10 +35,6 @@ def test_bubble_fraction():
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(reason="seed-inherited: fails identically on the seed "
-                          "commit (see ROADMAP open items); xfail keeps the "
-                          "scheduled slow CI job green and meaningful",
-                   strict=False)
 def test_gpipe_matches_sequential():
     out = run_sub("""
         import numpy as np
