@@ -22,6 +22,13 @@ inverse-inclusion weights feeding the weighted projection-leverage estimator
 (`rls.from_sketch`) and the weighted SoR solve:
 
   PYTHONPATH=src python -m benchmarks.bench_pipeline --compare --n 16384
+
+Accumulation-strategy comparison (plain fp32 running sum vs the compensated
+two-float stream of `repro.core.streaming`, risk + wall-clock; the fast CI
+job smokes the compensated solve at n=8192):
+
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --accumulator          # n=1e6
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --accumulator --n 8192
 """
 
 from __future__ import annotations
@@ -112,6 +119,54 @@ def bench_one(n: int, tile: int, m: int | None, seed: int = 0,
     print("  stages: " + ",".join(f"{k}={v}" for k, v in
                                   rec["stage_seconds"].items()))
     return rec
+
+
+# -------------------------------------------------------------- accumulator --
+
+def accumulator_bench(n: int = 1_000_000, seed: int = 0) -> list[dict]:
+    """plain vs compensated streaming accumulation: risk + wall-clock at one n.
+
+    The ROADMAP's fp32 scale ceiling in numbers: the same evaluate fold runs
+    once with the historical plain fp32 Gram accumulation and once with the
+    two-float compensated stream (`repro.core.streaming`), which also lowers
+    `solve_normal_eq`'s spectral truncation floor (eps/32).  Records risk,
+    rmse and per-stage seconds for both so BENCH_pipeline.json tracks what
+    the extra ~2 VPU adds per tile buy at n = 1e6 (section
+    `pipeline_accumulator`; the fast CI job smokes the compensated solve at
+    n = 8192).
+    """
+    data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
+    n_eval = min(n, 50_000)
+    records = []
+    # warm every jit cache BOTH timed folds hit (the two accumulators trace
+    # different solve HLO, so each needs its own untimed pass — otherwise
+    # whichever runs first absorbs all compile time and the wall-clock
+    # comparison is a compile-order artifact)
+    for acc in ("plain", "compensated"):
+        SAKRRPipeline(PipelineConfig(
+            nu=1.5, tile=min(n, 16_384), accumulator=acc)).evaluate(
+                data.x, data.y, x_eval=data.x[:n_eval],
+                y_eval=data.y[:n_eval], f_star=data.f_star[:n_eval])
+    print("accumulator,risk,rmse,solve_seconds,total_seconds")
+    for acc in ("plain", "compensated"):
+        cfg = PipelineConfig(nu=1.5, tile=min(n, 16_384), accumulator=acc)
+        pipe = SAKRRPipeline(cfg)
+        t0 = time.perf_counter()
+        scores = pipe.evaluate(data.x, data.y, x_eval=data.x[:n_eval],
+                               y_eval=data.y[:n_eval],
+                               f_star=data.f_star[:n_eval])
+        total_s = time.perf_counter() - t0
+        rec = {"section": "pipeline_accumulator", "n": n,
+               "m": pipe.state.num_landmarks, "accumulator": acc,
+               "risk": scores.get("risk"), "rmse": scores.get("rmse"),
+               "solve_seconds": round(pipe.seconds.get("solve", 0.0), 4),
+               "total_seconds": round(total_s, 4),
+               "stage_seconds": {k: round(v, 4)
+                                 for k, v in pipe.seconds.items()}}
+        records.append(rec)
+        print(f"{acc},{rec['risk']:.4e},{rec['rmse']:.4e},"
+              f"{rec['solve_seconds']},{rec['total_seconds']}")
+    return records
 
 
 # ---------------------------------------------------------------- calibrate --
@@ -285,8 +340,11 @@ def compare_methods(n: int = 16_384, m: int | None = None,
 def main(json_out: str | None = "BENCH_pipeline.json",
          n_max: int = 262_144, n_only: int | None = None,
          stages: list[str] | None = None, compare: bool = False,
-         calibrate: bool = False) -> None:
-    if calibrate:
+         calibrate: bool = False, accumulator: bool = False) -> None:
+    if accumulator:
+        print("\n## pipeline accumulator (plain vs compensated two-float)")
+        records = accumulator_bench(n=n_only or 1_000_000)
+    elif calibrate:
         print("\n## pipeline calibrate (shared-Gram sweep vs naive refits)")
         records = calibrate_bench(n=n_only or 16_384)
     elif compare:
@@ -328,8 +386,13 @@ if __name__ == "__main__":
                     help="CalibrateStage sweep economics: shared-Gram "
                          "multi-lam sweep vs naive per-lam refits, plus the "
                          "full (lam, h) calibrate fold vs paper-rate risk")
+    ap.add_argument("--accumulator", action="store_true",
+                    help="plain vs compensated (two-float) streaming "
+                         "accumulation: risk and wall-clock at n "
+                         "(default 1e6)")
     ap.add_argument("--json", default="BENCH_pipeline.json")
     args = ap.parse_args()
     main(json_out=args.json or None, n_max=args.n_max, n_only=args.n,
          stages=args.stages.split(",") if args.stages else None,
-         compare=args.compare, calibrate=args.calibrate)
+         compare=args.compare, calibrate=args.calibrate,
+         accumulator=args.accumulator)

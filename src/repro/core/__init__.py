@@ -10,6 +10,8 @@ Public API:
   quadrature — vectorized radial quadrature for Eq. (6)
   polylog    — -Li_s(-x) for the Gaussian closed form
   sampling   — with-replacement / Gumbel top-k landmark sampling
+  streaming  — unified tile-reduction engine (plain / compensated two-float
+               accumulation, row-slab tiling, mesh psum plumbing)
 """
 
 from repro.core import (  # noqa: F401
@@ -22,4 +24,5 @@ from repro.core import (  # noqa: F401
     quadrature,
     rls,
     sampling,
+    streaming,
 )

@@ -89,7 +89,8 @@ def kde_sharded(x: Array, kde_sample: Array, h: float) -> Array:
 def kde_binned_sharded(x: Array, h: float, *, grid_size: int = 96,
                        lo: Array | None = None, hi: Array | None = None,
                        tile: int | None = None,
-                       backend: str | None = None) -> Array:
+                       backend: str | None = None,
+                       accumulator: str = "plain") -> Array:
     """Paper-faithful Õ(n) KDE, sharded: the §Perf replacement for the
     O(n·m_kde) direct tile (see EXPERIMENTS.md §Perf cell C).
 
@@ -99,20 +100,24 @@ def kde_binned_sharded(x: Array, h: float, *, grid_size: int = 96,
     (`repro.pipeline.stages.DensityStage`) runs under an active mesh.
     """
     return kde_binned_sharded_multi(x, (h,), grid_size=grid_size, lo=lo,
-                                    hi=hi, tile=tile, backend=backend)[0]
+                                    hi=hi, tile=tile, backend=backend,
+                                    accumulator=accumulator)[0]
 
 
 def kde_binned_sharded_multi(x: Array, hs, *, grid_size: int = 96,
                              lo: Array | None = None, hi: Array | None = None,
                              tile: int | None = None,
-                             backend: str | None = None) -> Array:
+                             backend: str | None = None,
+                             accumulator: str = "plain") -> Array:
     """Sharded binned KDE for a bandwidth GRID: (H, n) at one deposit+psum.
 
     shard_map body: stream LOCAL rows through the CIC deposit
-    (`kernels.dispatch.binned_scatter` — windowed XLA scatter or the Pallas
-    `kde_binned` kernel per `backend`, O(tile 2^d) transient per chip) into
-    a local copy of the (small, replicated) grid -> psum the grids across
-    all mesh axes -> per-bandwidth FFT smoothing + purely local multilinear
+    (`kernels.dispatch.binned_scatter` — the engine-tiled XLA scatter or the
+    Pallas `kde_binned` kernel per `backend`, O(tile 2^d) transient per
+    chip) into a local copy of the (small, replicated) grid -> psum the
+    accumulator STATE across all mesh axes (the `repro.core.streaming`
+    strategy owns the collective: the compensated (hi, lo) pair crosses it
+    un-collapsed) -> per-bandwidth FFT smoothing + purely local multilinear
     gather.  The deposit and the grid psum are bandwidth-independent and run
     ONCE for the whole sweep — the mesh half of the CalibrateStage contract
     (a naive sweep would psum per candidate).  Per-chip bytes stay
@@ -123,6 +128,7 @@ def kde_binned_sharded_multi(x: Array, hs, *, grid_size: int = 96,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.core import kde as core_kde
+    from repro.core import streaming
     from repro.distributed import sharding as shd
 
     n, d = x.shape
@@ -134,13 +140,17 @@ def kde_binned_sharded_multi(x: Array, hs, *, grid_size: int = 96,
         lo = jnp.full((d,), -5.0, x.dtype)
         hi = jnp.full((d,), 5.0, x.dtype)
     spacing = (hi - lo) / (grid_size - 1)
+    acc = streaming.get(accumulator)
 
     def body(x_loc, *, psum_axes=()):
         from repro.kernels import dispatch
-        grid = dispatch.binned_scatter(x_loc, lo, spacing, grid_size,
-                                       backend=backend, tile=tile)
+        state = dispatch.binned_scatter(x_loc, lo, spacing, grid_size,
+                                        backend=backend, tile=tile,
+                                        accumulator=accumulator,
+                                        finalize=False)
         if psum_axes:   # only meaningful inside shard_map; ONE psum per sweep
-            grid = jax.lax.psum(grid, axis_name=psum_axes)
+            state = acc.psum(state, psum_axes)
+        grid = acc.finalize(state)
         outs = []
         for h in hs:
             smooth = core_kde._fft_smooth(grid, spacing,

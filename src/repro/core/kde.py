@@ -39,7 +39,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels import round_up
+from repro.core import streaming
 
 Array = jax.Array
 
@@ -92,18 +92,25 @@ def _cic_stencil(frac: Array, weights: Array | None = None) -> Array:
     return upd
 
 
-@functools.partial(jax.jit, static_argnames=("grid_size", "tile"))
+@functools.partial(jax.jit, static_argnames=("grid_size", "tile",
+                                             "accumulator", "finalize"))
 def scatter_cic(points: Array, lo: Array, spacing: Array, grid_size: int,
                 *, weights: Array | None = None,
-                tile: int | None = None) -> Array:
+                tile: int | None = None,
+                accumulator: str = "plain", finalize: bool = True):
     """Cloud-in-cell deposit of (weighted) points onto a (grid_size,)^d grid.
 
     Each point's whole (2,)^d stencil lands in ONE windowed scatter-add
     update (update_window_dims), so the serial scatter loop runs n times
     instead of n 2^d — on CPU this is the difference between the deposit
     dominating the KDE and disappearing into the FFT's shadow.  With `tile`
-    set, rows stream through a lax.scan and the transient stencil buffer is
-    O(tile 2^d) instead of O(n 2^d); padded rows carry zero weight.
+    set, rows stream through the engine (`streaming.tile_reduce`: zero-pad
+    + zero weights on the ragged tail, O(tile 2^d) transient stencil) with
+    the scatter as the engine's `combine`.  ``accumulator="compensated"``
+    carries the grid as a two-float (hi, lo) pair — each tile's deposit is
+    materialized against a zero grid and folded in with an error-free
+    two-sum; ``finalize=False`` returns the accumulator state for the mesh
+    psum in `core.distributed.kde_binned_sharded_multi`.
     """
     n, d = points.shape
     dnums = jax.lax.ScatterDimensionNumbers(
@@ -111,23 +118,22 @@ def scatter_cic(points: Array, lo: Array, spacing: Array, grid_size: int,
         inserted_window_dims=(),
         scatter_dims_to_operand_dims=tuple(range(d)))
 
-    def deposit(grid, pts, w):
+    def combine(grid, pw):
+        pts, w = pw
         base, frac = cic_prep(pts, lo, spacing, grid_size)
         return jax.lax.scatter_add(grid, base, _cic_stencil(frac, w), dnums)
 
-    grid0 = jnp.zeros((grid_size,) * d, dtype=points.dtype)
+    acc = streaming.get(accumulator)
+    init = jnp.zeros((grid_size,) * d, dtype=points.dtype)
     if tile is None or tile >= n:
-        return deposit(grid0, points, weights)
-    np_ = round_up(n, tile)
+        # one-shot deposit: weights=None skips the stencil multiply entirely
+        state = acc.add(acc.init(init), (points, weights), combine)
+        return acc.finalize(state) if finalize else state
     w = jnp.ones((n,), points.dtype) if weights is None else weights
-    pts = jnp.pad(points, ((0, np_ - n), (0, 0))).reshape(-1, tile, d)
-    wt = jnp.pad(w, (0, np_ - n)).reshape(-1, tile)
-
-    def step(grid, pw):
-        return deposit(grid, pw[0], pw[1]), None
-
-    grid, _ = jax.lax.scan(step, grid0, (pts, wt))
-    return grid
+    return streaming.tile_reduce(
+        lambda pts, wt: (pts, wt), points, (w,), tile=tile, init=init,
+        combine=combine, accumulator=accumulator, pad="zero",
+        finalize=finalize)
 
 
 @functools.partial(jax.jit, static_argnames=("grid_size",))
@@ -188,18 +194,20 @@ def kde_binned(
     backend: str | None = None,
     tile: int | None = None,
     interpret: bool | None = None,
+    accumulator: str = "plain",
 ) -> Array:
     """Linear-time binned Gaussian KDE for d <= 3 (see module docstring).
 
-    backend/tile/interpret configure the deposit stage only (see
+    backend/tile/interpret/accumulator configure the deposit stage only (see
     `repro.kernels.dispatch.binned_scatter`): 'pallas' runs the tiled VMEM
     scatter kernel, 'xla' (CPU/GPU default) the windowed streaming scatter
-    with `tile` rows per scan step.  lo/hi pin the grid bounds (default:
+    with `tile` rows per engine slab.  lo/hi pin the grid bounds (default:
     data bounds +-4h) — pass the bounds of a WIDER bandwidth to evaluate
     several h on one shared grid (`kde_binned_multi` parity).
     """
     return kde_binned_multi(query, data, (h,), grid_size, lo=lo, hi=hi,
-                            backend=backend, tile=tile, interpret=interpret)[0]
+                            backend=backend, tile=tile, interpret=interpret,
+                            accumulator=accumulator)[0]
 
 
 def kde_binned_multi(
@@ -213,6 +221,7 @@ def kde_binned_multi(
     backend: str | None = None,
     tile: int | None = None,
     interpret: bool | None = None,
+    accumulator: str = "plain",
 ) -> Array:
     """Binned KDE for a bandwidth GRID at one deposit cost: (H, n) densities.
 
@@ -240,7 +249,8 @@ def kde_binned_multi(
     from repro.kernels import dispatch  # deferred: core -> kernels at call time
     grid = dispatch.binned_scatter(data, lo, spacing, grid_size,
                                    backend=backend, tile=tile,
-                                   interpret=interpret)
+                                   interpret=interpret,
+                                   accumulator=accumulator)
     outs = []
     for h in hs:
         smooth = _fft_smooth(grid, spacing, h, grid_size, d)
@@ -262,6 +272,7 @@ def estimate_densities(
     *,
     backend: str | None = None,
     tile: int | None = None,
+    accumulator: str = "plain",
 ) -> Array:
     """Self-density p_hat(x_i) for all sample points (leave-self-in, as KDE).
 
@@ -282,7 +293,7 @@ def estimate_densities(
         method = "binned" if d <= 3 else "direct"
     if method == "binned":
         return kde_binned(x, x, h, grid_size=grid_size, backend=backend,
-                          tile=tile)
+                          tile=tile, accumulator=accumulator)
     if method == "direct":
         return kde_direct(x, x, h)
     raise ValueError(f"unknown KDE method {method!r}")

@@ -33,8 +33,8 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels import (Kernel, kernel_matrix, pad_rows_sentinel,
-                                round_up, sentinel_is_safe)
+from repro.core import streaming
+from repro.core.kernels import Kernel, kernel_matrix, sentinel_is_safe
 from repro.core.sampling import sample_with_replacement
 
 Array = jax.Array
@@ -88,7 +88,8 @@ def weighted_normal_eq(g: Array, rhs: Array, k_mm: Array,
 
 
 def _whitened_solve(g: Array, rhs: Array, evals: Array, evecs: Array,
-                    g_max: Array, n: int, lam: float, jitter: float) -> Array:
+                    g_max: Array, n: int, lam: float, jitter: float,
+                    eps_scale: float = 1.0) -> Array:
     """The per-lam tail of `solve_normal_eq`: truncate + whiten + solve.
 
     Takes the lam-INDEPENDENT eigendecomposition of K_mm (and the trace
@@ -96,9 +97,11 @@ def _whitened_solve(g: Array, rhs: Array, evals: Array, evecs: Array,
     eigh once and only re-runs this O(m^3-but-tiny) tail per candidate —
     the op sequence per lam is identical to the single-lam solve, so the
     sweep is bit-equal to per-lam solves (locked in tests/test_calibrate.py).
+    `eps_scale` shrinks the dtype-noise-floor term for Grams accumulated
+    with less noise than a plain fp32 running sum (streaming.EPS_SCALE).
     """
     m = evals.shape[0]
-    eps = jnp.finfo(g.dtype).eps
+    eps = float(jnp.finfo(g.dtype).eps) * eps_scale
     tau = jnp.maximum(jitter * evals[-1], eps * g_max / (n * lam))
     inv_sqrt = jnp.where(evals > tau, 1.0 / jnp.sqrt(jnp.maximum(evals, tau)),
                          0.0)
@@ -110,7 +113,7 @@ def _whitened_solve(g: Array, rhs: Array, evals: Array, evecs: Array,
 
 
 def solve_normal_eq(g: Array, rhs: Array, k_mm: Array, n: int, lam: float,
-                    jitter: float = 1e-6) -> Array:
+                    jitter: float = 1e-6, eps_scale: float = 1.0) -> Array:
     """beta = (G + n lam K_mm)^{-1} rhs via spectrally-truncated whitening.
 
     The plain normal equations are numerically hopeless at scale: K_mm's
@@ -130,18 +133,26 @@ def solve_normal_eq(g: Array, rhs: Array, k_mm: Array, n: int, lam: float,
     represent (matching the f64 solve's risk to ~1e-4), while in f64 the
     cutoff recedes and the solve is the textbook one.  Truncated directions
     are zeroed via masks, keeping every shape static (jit-safe).
+
+    ``eps_scale`` (default 1.0: the plain fp32 floor) lowers the noise-floor
+    term for Grams with sub-eps accumulation noise — the compensated
+    two-float stream passes `streaming.EPS_SCALE["compensated"]` so the
+    solve KEEPS the directions whose signal the better accumulation
+    preserved (regression-tested in tests/test_streaming_engine.py).
     """
     evals, evecs = jnp.linalg.eigh(k_mm)
     # trace >= lambda_max for PSD G, and is tight here (G's spectrum is
     # dominated by the near-constant kernel component) — O(m) vs an O(m^3)
     # eigendecomposition for a quantity that only needs an upper bound.
     g_max = jnp.trace(g)
-    return _whitened_solve(g, rhs, evals, evecs, g_max, n, lam, jitter)
+    return _whitened_solve(g, rhs, evals, evecs, g_max, n, lam, jitter,
+                           eps_scale)
 
 
 def solve_normal_eq_multi(g: Array, rhs: Array, k_mm: Array, n: int,
                           lams: Sequence[float],
-                          jitter: float = 1e-6) -> Array:
+                          jitter: float = 1e-6,
+                          eps_scale: float = 1.0) -> Array:
     """`solve_normal_eq` over a lam grid, sharing the eigendecomposition.
 
     The truncation cutoff tau depends on lam, so each candidate gets its own
@@ -152,7 +163,8 @@ def solve_normal_eq_multi(g: Array, rhs: Array, k_mm: Array, n: int,
     evals, evecs = jnp.linalg.eigh(k_mm)
     g_max = jnp.trace(g)
     return jnp.stack([
-        _whitened_solve(g, rhs, evals, evecs, g_max, n, float(lam), jitter)
+        _whitened_solve(g, rhs, evals, evecs, g_max, n, float(lam), jitter,
+                        eps_scale)
         for lam in lams])
 
 
@@ -206,75 +218,78 @@ def fitted(kernel: Kernel, fit_: NystromFit, x_train: Array) -> Array:
 
 # ---------------------------------------------------------------- streaming --
 
+def _scan_steps(n: int, tile: int, x: Array,
+                backend: str | None = None) -> int:
+    """Accumulation steps the Gram stream ran PER CHIP — the budget
+    `eps_scale` may lower the compensated truncation floor by.  Under an
+    active mesh the stream is row-sharded, so each chip saw only
+    n / row_shard_count rows (a one-tile-per-chip stream has no cross-tile
+    error to compensate even when the global n spans several tiles).  The
+    fold granularity is backend-dependent: the XLA engine compensates
+    across `tile`-row scan steps, the Pallas gram kernel across its bm-row
+    (<= 256) VMEM tile folds — so the TPU path earns its lower floor even
+    when n fits one XLA-sized slab."""
+    from repro.kernels import dispatch
+    n_loc = max(1, n // streaming.row_shard_count(x.shape))
+    grain = 256 if dispatch.resolve(backend) == "pallas" else tile
+    return -(-n_loc // min(grain, n_loc))
+
+
 def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
-                   *, tile: int = 8192) -> tuple[Array, Array]:
-    """(K_nm^T K_nm, K_nm^T w) accumulated over `tile`-row slabs (lax.scan).
+                   *, tile: int = 8192, accumulator: str = "plain",
+                   finalize: bool = True) -> tuple[Array, Array]:
+    """(K_nm^T K_nm, K_nm^T w) accumulated over `tile`-row slabs.
 
     The (tile, m) kernel slab is rebuilt in registers each step and dies
-    there; peak memory is O(tile * m + m^2), independent of n.  This is the
+    there; peak memory is O(tile * m + m^2), independent of n.  Tiling,
+    padding and the accumulation strategy live in `repro.core.streaming`
+    ("plain" is bit-equal to the historical hand-rolled lax.scan,
+    "compensated" carries a two-float error sum across tiles).  This is the
     XLA backend of `repro.kernels.dispatch.gram_accumulate`; the Pallas
     `gram` kernel computes the same quantity tile-fused on TPU.
+    `finalize=False` returns the raw accumulator state for a mesh psum.
     """
-    n, d = x.shape
     m = xm.shape[0]
     acc = jnp.promote_types(x.dtype, jnp.float32)  # f64 under enable_x64
-    tile = min(tile, n)
-    np_ = round_up(n, tile)
-    xt = pad_rows_sentinel(x, np_).reshape(np_ // tile, tile, d)
-    wt = jnp.pad(w.astype(acc), (0, np_ - n)).reshape(np_ // tile, tile)
 
-    def step(carry, xw):
-        g, r = carry
-        xi, wi = xw
+    def emit(xi, wi):
         k = kernel_matrix(kernel, xi, xm).astype(acc)  # (tile, m)
-        g = g + jax.lax.dot_general(k, k, (((0,), (0,)), ((), ())),
-                                    preferred_element_type=acc)
-        r = r + jax.lax.dot_general(k, wi, (((0,), (0,)), ((), ())),
-                                    preferred_element_type=acc)
-        return (g, r), None
+        return (jax.lax.dot_general(k, k, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=acc),
+                jax.lax.dot_general(k, wi, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=acc))
 
     init = (jnp.zeros((m, m), acc), jnp.zeros((m,), acc))
-    (g, r), _ = jax.lax.scan(step, init, (xt, wt))
-    return g, r
+    return streaming.tile_reduce(emit, x, (w.astype(acc),), tile=tile,
+                                 init=init, accumulator=accumulator,
+                                 pad="sentinel", finalize=finalize)
 
 
 def streaming_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array,
                         *, tile: int = 8192, backend: str | None = None,
-                        interpret: bool | None = None) -> tuple[Array, Array]:
+                        interpret: bool | None = None,
+                        accumulator: str = "plain",
+                        finalize: bool = True) -> tuple[Array, Array]:
     """Mesh-aware (G, rhs): shards rows over the "rows" logical axis.
 
     With an active `repro.distributed.sharding` mesh whose "rows" rule maps
     to a mesh axis that divides n, each device accumulates its local row
-    slab and the (m, m)/(m,) results are psum-reduced.  Otherwise (no mesh,
-    or indivisible n) this is exactly the single-device accumulation.
+    slab and the accumulator state is psum-reduced (`streaming.mesh_reduce`
+    — the compensated (hi, lo) pair crosses the collective un-collapsed).
+    Otherwise (no mesh, or indivisible n) this is exactly the single-device
+    accumulation.
     """
-    from repro.distributed import sharding as shd
     from repro.kernels import dispatch
 
     def local(x_loc, w_loc, xm_rep):
         return dispatch.gram_accumulate(kernel, x_loc, xm_rep, w_loc,
                                         backend=backend, tile=tile,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        accumulator=accumulator,
+                                        finalize=False)
 
-    act = shd.active()
-    if act is not None:
-        row_axes = act.spec(("rows", None), x.shape)[0]
-        if row_axes is not None:
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import PartitionSpec as P
-            axes = ((row_axes,) if isinstance(row_axes, str)
-                    else tuple(row_axes))
-
-            def body(x_loc, w_loc, xm_rep):
-                g, r = local(x_loc, w_loc, xm_rep)
-                return jax.lax.psum(g, axes), jax.lax.psum(r, axes)
-
-            return shard_map(
-                body, mesh=act.mesh,
-                in_specs=(P(row_axes, None), P(row_axes), P(None, None)),
-                out_specs=(P(None, None), P(None)),
-            )(x, y, xm)
-    return local(x, y, xm)
+    return streaming.mesh_reduce(local, (x, y), (xm,),
+                                 accumulator=accumulator, finalize=finalize)
 
 
 def fit_streaming(
@@ -289,6 +304,7 @@ def fit_streaming(
     interpret: bool | None = None,
     jitter: float = 1e-6,
     weights: Array | None = None,
+    accumulator: str = "plain",
 ) -> NystromFit:
     """`fit_from_landmarks` without ever materializing K_nm.
 
@@ -297,19 +313,25 @@ def fit_streaming(
     `weights` applies the without-replacement importance correction as a
     post-accumulation O(m^2) column rescaling (`weighted_normal_eq`) — the
     row stream itself is weight-free, so the Pallas/XLA accumulation kernels
-    are untouched.
+    are untouched.  `accumulator="compensated"` streams the Gram through the
+    two-float error-carrying sum (`repro.core.streaming`) and lowers the
+    solve's spectral noise floor to match — fp32 then keeps whitened
+    directions the plain accumulation must truncate.
     """
     _require_sentinel_safe(kernel)
     n = x.shape[0]
     xm = jnp.take(x, landmark_idx, axis=0)
     g, rhs = streaming_normal_eq(kernel, x, y, xm, tile=tile,
-                                 backend=backend, interpret=interpret)
+                                 backend=backend, interpret=interpret,
+                                 accumulator=accumulator)
     # k_mm is O(m^2) work — the core path keeps it in the input dtype, which
     # the dense solve also uses (dtype parity matters more than MXU here).
     k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
     if weights is not None:
         g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
-    beta = solve_normal_eq(g, rhs, k_mm, n, lam, jitter=jitter)
+    beta = solve_normal_eq(g, rhs, k_mm, n, lam, jitter=jitter,
+                           eps_scale=streaming.eps_scale(
+                               accumulator, _scan_steps(n, tile, x, backend)))
     if weights is not None:
         beta = weights.astype(beta.dtype) * beta
     return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx,
@@ -328,6 +350,7 @@ def fit_streaming_multi(
     interpret: bool | None = None,
     jitter: float = 1e-6,
     weights: Array | None = None,
+    accumulator: str = "plain",
 ) -> list[NystromFit]:
     """`fit_streaming` over a lam grid at ONE Gram-accumulation cost.
 
@@ -344,11 +367,15 @@ def fit_streaming_multi(
     n = x.shape[0]
     xm = jnp.take(x, landmark_idx, axis=0)
     g, rhs = streaming_normal_eq(kernel, x, y, xm, tile=tile,
-                                 backend=backend, interpret=interpret)
+                                 backend=backend, interpret=interpret,
+                                 accumulator=accumulator)
     k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
     if weights is not None:
         g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
-    betas = solve_normal_eq_multi(g, rhs, k_mm, n, lams, jitter=jitter)
+    betas = solve_normal_eq_multi(
+        g, rhs, k_mm, n, lams, jitter=jitter,
+        eps_scale=streaming.eps_scale(accumulator,
+                                      _scan_steps(n, tile, x, backend)))
     if weights is not None:
         betas = weights.astype(betas.dtype)[None, :] * betas
     return [NystromFit(beta=betas[i], landmarks=xm, landmark_idx=landmark_idx,
@@ -364,43 +391,22 @@ def predict_streaming_multi(kernel: Kernel, fits: Sequence[NystromFit],
     beta-independent, so a lam sweep evaluates it once per tile and applies
     all betas as one (tile, m) x (m, L) matmul.  All fits must share
     `landmarks` (the CalibrateStage invariant); mesh behavior matches
-    `predict_streaming` (purely local row slabs).
+    `predict_streaming` (purely local row slabs, `streaming.mesh_map`).
     """
-    from repro.distributed import sharding as shd
     from repro.kernels import dispatch
 
     _require_sentinel_safe(kernel)
-    n, d = x_new.shape
     betas = jnp.stack([f.beta for f in fits], axis=1)     # (m, L)
     xm = fits[0].landmarks
 
     def local(x_loc, xm, betas):
-        n_loc = x_loc.shape[0]
-        t = min(tile, n_loc)
-        np_ = round_up(n_loc, t)
-        tiles = pad_rows_sentinel(x_loc, np_).reshape(np_ // t, t, d)
-
         def one(xt):
             return dispatch.kernel_matrix(kernel, xt, xm,
                                           backend=backend) @ betas  # (t, L)
 
-        out = jax.lax.map(one, tiles).reshape(np_, betas.shape[1])
-        return out[:n_loc]
+        return streaming.tile_map(one, x_loc, tile=tile)
 
-    act = shd.active()
-    if act is not None:
-        row_axes = act.spec(("rows", None), x_new.shape)[0]
-        if row_axes is not None:
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import PartitionSpec as P
-
-            out = shard_map(
-                local, mesh=act.mesh,
-                in_specs=(P(row_axes, None), P(None, None), P(None, None)),
-                out_specs=P(row_axes, None),
-            )(x_new, xm, betas)
-            return out.T
-    return local(x_new, xm, betas).T
+    return streaming.mesh_map(local, x_new, (xm, betas), out_rank=2).T
 
 
 def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
@@ -411,37 +417,20 @@ def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
     Mesh-aware like the solve: under an active `repro.distributed.sharding`
     mesh whose "rows" rule maps to a mesh axis that divides n_new, each
     device predicts its local row slab against the replicated landmarks and
-    beta (no collective — predict is embarrassingly row-parallel).
-    Otherwise this is exactly the single-device batched predict.
+    beta (no collective — predict is embarrassingly row-parallel,
+    `streaming.mesh_map`).  Otherwise this is exactly the single-device
+    batched predict (`streaming.tile_map` row slabs).
     """
-    from repro.distributed import sharding as shd
     from repro.kernels import dispatch
 
     _require_sentinel_safe(kernel)
-    n, d = x_new.shape
 
     def local(x_loc, xm, beta):
-        n_loc = x_loc.shape[0]
-        t = min(tile, n_loc)
-        np_ = round_up(n_loc, t)
-        tiles = pad_rows_sentinel(x_loc, np_).reshape(np_ // t, t, d)
-
         def one(xt):
             return dispatch.kernel_matrix(kernel, xt, xm,
                                           backend=backend) @ beta
 
-        return jax.lax.map(one, tiles).reshape(np_)[:n_loc]
+        return streaming.tile_map(one, x_loc, tile=tile)
 
-    act = shd.active()
-    if act is not None:
-        row_axes = act.spec(("rows", None), x_new.shape)[0]
-        if row_axes is not None:
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import PartitionSpec as P
-
-            return shard_map(
-                local, mesh=act.mesh,
-                in_specs=(P(row_axes, None), P(None, None), P(None)),
-                out_specs=P(row_axes),
-            )(x_new, fit_.landmarks, fit_.beta)
-    return local(x_new, fit_.landmarks, fit_.beta)
+    return streaming.mesh_map(local, x_new, (fit_.landmarks, fit_.beta),
+                              out_rank=1)

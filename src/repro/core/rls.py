@@ -2,11 +2,12 @@
 
   * ``uniform``        — "Vanilla": q_i = 1/n (no leverage information).
   * ``recursive_rls``  — Musco & Musco (2017) Recursive-RLS: recursively halve
-    the data, estimate ridge leverage on the half, Bernoulli-sample a sketch,
-    refine.  O(n d_stat^2) kernel evaluations.
+    the data, estimate ridge leverage on the half, race-sample a sketch
+    (Gumbel top-k at the Bernoulli inclusion rates — deterministic sketch
+    size, see `_race_sketch`), refine.  O(n d_stat^2) kernel evaluations.
   * ``bless``          — Rudi et al. (2018) bottom-up path following: start at
     a huge ridge (where uniform sampling is provably fine) and geometrically
-    anneal it down to n*lam, resampling a sketch at every step.
+    anneal it down to n*lam, race-resampling a sketch at every step.
 
 All share the weighted projection estimator of the ridge leverage scores:
 with sketch S (indices), importance weights w (expected inverse inclusion),
@@ -113,11 +114,29 @@ def from_sketch(
                      sketch_size=int(sketch_x.shape[0]))
 
 
-def _bernoulli_sketch(rng: np.random.Generator, inclusion: np.ndarray):
-    mask = rng.random(inclusion.shape[0]) < inclusion
-    idx = np.nonzero(mask)[0]
-    weights = 1.0 / np.maximum(inclusion[idx], 1e-12)
-    return idx, weights
+def _race_sketch(rng: np.random.Generator, inclusion: np.ndarray):
+    """Deterministic-size sketch via a host-side exponential (Gumbel) race.
+
+    Historically Recursive-RLS / BLESS Bernoulli-sampled their sketches at
+    per-point inclusion probabilities pi_i, so the sketch SIZE was random
+    (std ~ sqrt(sum pi (1 - pi)) — the `--compare` bench's sketch_size /
+    d_proj rows wobbled run to run).  The race keeps the same importance
+    profile (rates q = pi) but always returns k = round(sum pi) distinct
+    indices: top-k on log q + Gumbel == bottom-k on arrivals E/q — the
+    numpy twin of `sampling.sample_weighted_without_replacement`, with the
+    same inverse-inclusion threshold weights (pi_hat = 1 - exp(-q tau),
+    tau the (k+1)-th arrival)."""
+    n = inclusion.shape[0]
+    k = int(np.clip(round(float(inclusion.sum())), 1, n))
+    q = np.maximum(inclusion, 1e-38)
+    s = np.log(q) + rng.gumbel(size=n)
+    order = np.argsort(-s)
+    idx = order[:k]
+    if k >= n:
+        return idx, np.ones(k)
+    tau = np.exp(-s[order[k]])
+    pi_hat = -np.expm1(-q[idx] * tau)
+    return idx, 1.0 / np.maximum(pi_hat, 1e-12)
 
 
 def recursive_rls(
@@ -148,9 +167,7 @@ def recursive_rls(
             )
         )
         inclusion = np.minimum(1.0, oversample * lev * math.log(max(m, 2)))
-        pick, w = _bernoulli_sketch(rng, inclusion)
-        if pick.shape[0] == 0:  # degenerate: keep a couple of points
-            pick, w = np.arange(min(2, half.shape[0])), np.ones(min(2, half.shape[0]))
+        pick, w = _race_sketch(rng, inclusion)   # k = round(sum pi) >= 1
         return half[pick], w
 
     sketch_idx, sketch_w = recurse(np.arange(n))
@@ -194,11 +211,7 @@ def bless(
             )
         )
         inclusion = np.minimum(1.0, oversample * lev * math.log(n))
-        pick, w = _bernoulli_sketch(rng, inclusion)
-        if pick.shape[0] == 0:
-            pick, w = sketch_idx, sketch_w
-            continue
-        sketch_idx, sketch_w = pick, w
+        sketch_idx, sketch_w = _race_sketch(rng, inclusion)  # k >= 1 always
     lev = projection_leverage(
         kernel, x, jnp.asarray(x_np[sketch_idx]), jnp.asarray(sketch_w), mu_final
     )

@@ -27,10 +27,20 @@ def sample_with_replacement(key: jax.Array, probs: Array, m: int) -> Array:
     return jax.random.categorical(key, logits, shape=(m,))
 
 
-def _perturbed_logits(key: jax.Array, probs: Array) -> Array:
+def _perturbed_logits(key: jax.Array, probs: Array,
+                      gumbel: Array | None = None) -> Array:
+    """log q + standard Gumbel noise; `gumbel` shares one race across calls.
+
+    Passing a precomputed noise field (shape (n,)) makes several draws with
+    DIFFERENT probs share the same exponential race — candidates in a sweep
+    (e.g. the CalibrateStage bandwidth grid) then differ only through their
+    probs, never through sampling noise.  Drawing here from `key` with the
+    logits' shape/dtype is bit-identical to the historical per-call draw.
+    """
     logits = jnp.log(jnp.maximum(probs, 1e-38))
-    gumbel = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
-    return logits + gumbel
+    if gumbel is None:
+        gumbel = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
+    return logits + gumbel.astype(logits.dtype)
 
 
 def sample_without_replacement(key: jax.Array, probs: Array, m: int) -> Array:
@@ -39,7 +49,9 @@ def sample_without_replacement(key: jax.Array, probs: Array, m: int) -> Array:
 
 
 def sample_weighted_without_replacement(
-        key: jax.Array, probs: Array, m: int) -> tuple[Array, Array]:
+        key: jax.Array, probs: Array, m: int, *,
+        threshold: str = "race",
+        gumbel: Array | None = None) -> tuple[Array, Array]:
     """Gumbel top-k landmarks + inverse-inclusion importance weights.
 
     With-replacement sampling at m >= 1024 wastes budget on duplicate
@@ -47,32 +59,68 @@ def sample_weighted_without_replacement(
     spends every slot on a distinct point.
 
     The weights are 1 / pi_hat_i with pi_hat_i the inclusion probability
-    estimated by the exponential-race threshold trick (Duffield et al.
-    priority sampling / Pareto sampling): the perturbed logit log q_i + g_i
-    equals -log t_i for an arrival time t_i = E_i / q_i, E_i ~ Exp(1), so
-    top-k selection is bottom-k on arrivals.  Conditioned on the (m+1)-th
-    arrival tau, inclusions are INDEPENDENT with
+    from the exponential-race threshold trick (Duffield et al. priority
+    sampling / Cohen-Kaplan bottom-k sketches): the perturbed logit
+    log q_i + g_i equals -log t_i for an arrival time t_i = E_i / q_i,
+    E_i ~ Exp(1), so top-k selection is bottom-k on arrivals.
 
-        pi_hat_i = P(t_i < tau | tau) = 1 - exp(-q_i tau),
+    ``threshold`` picks how pi_hat is computed for the selected items:
 
-    which makes 1{i in S} / pi_hat_i an (approximately) unbiased inclusion
-    estimator — the convention the weighted projection-leverage estimator
-    (`rls.projection_leverage`) and the Bernoulli sketches of Recursive-RLS /
-    BLESS already use (their weights are 1/inclusion too).  Certain
-    inclusions get weight ~1.  The subset-of-regressors Nystrom solve is
-    invariant to positive column rescaling (see `nystrom.fit_streaming`), so
-    there the weights only exercise the weighted code path; the projection /
-    RLS estimators genuinely consume them.  Requires m <= len(probs); at
-    m == n there is no threshold arrival and every weight is exactly 1.
+      * ``"race"`` (historical default) — the shared (m+1)-th arrival tau:
+        pi_hat_i = 1 - exp(-q_i tau), weight = 1 / clip(pi_hat, 1e-12, 1).
+      * ``"loo"`` — the exact leave-one-out threshold: for selected item i,
+        tau_i is the m-th smallest arrival among the OTHER n-1 items,
+        conditioned on which i's inclusion is exactly Bernoulli
+        (t_i ~ Exp(q_i) independent of the others), so
+        1{i in S} / (1 - exp(-q_i tau_i)) is EXACTLY conditionally
+        unbiased.  The per-item construction collapses to the shared
+        threshold at no extra work: for an item inside the top m, deleting
+        it promotes the (m+1)-th overall arrival to the m-th arrival of
+        the rest, so tau_i == tau for every selected item (an
+        order-statistics identity the tests lock).  Weights are evaluated
+        clip-free via expm1, so near-certain inclusions land at exactly 1
+        instead of the race mode's clipped estimate.
+
+    Deriving "loo" shows the exponential race's shared-threshold estimator
+    is already conditionally exact for every SELECTED item — the O(1/m)
+    weight bias of Pareto / sequential-Poisson races (whose arrival law
+    makes the threshold only approximately exponential) does not arise
+    here.  Both modes are validated against exact Plackett-Luce inclusion
+    enumeration in tests/test_sampling_weights.py; "loo" differs only in
+    the clip-free tail (and is the contract the docs now promise).
+
+    The convention matches the weighted projection-leverage estimator
+    (`rls.projection_leverage`) and the race sketches of Recursive-RLS /
+    BLESS (weights are 1/inclusion there too).  The subset-of-regressors
+    Nystrom solve is invariant to positive column rescaling (see
+    `nystrom.fit_streaming`), so there the weights only exercise the
+    weighted code path; the projection / RLS estimators genuinely consume
+    them.  Requires m <= len(probs); at m == n there is no threshold
+    arrival and every weight is exactly 1.  ``gumbel`` shares one
+    precomputed race across calls (see `_perturbed_logits`).
     """
+    if threshold not in ("race", "loo"):
+        raise ValueError(f"unknown threshold {threshold!r}; "
+                         "pick 'race' or 'loo'")
     n = probs.shape[0]
-    s = _perturbed_logits(key, probs)
+    s = _perturbed_logits(key, probs, gumbel)
     if m >= n:
         return jax.lax.top_k(s, m)[1], jnp.ones((m,), dtype=probs.dtype)
     vals, idx = jax.lax.top_k(s, m + 1)
-    tau = jnp.exp(-vals[m])                       # (m+1)-th arrival time
     q_sel = jnp.maximum(probs[idx[:m]], 1e-38)
+    # One threshold serves both modes: arrivals ascend as
+    # t_(1) <= ... <= t_(m+1), and deleting a selected item (rank <= m)
+    # from the race leaves t_(m+1) as the m-th smallest arrival of the
+    # REMAINING n-1 items — the exact leave-one-out threshold tau_i
+    # collapses to the shared tau, so P(i in S | others) =
+    # 1 - exp(-q_i tau) exactly for every selected item.
+    tau = jnp.exp(-vals[m])                       # (m+1)-th arrival time
     inclusion = -jnp.expm1(-q_sel * tau)
+    if threshold == "loo":
+        # clip-free: expm1 keeps near-certain inclusions at exactly 1; a
+        # denormal floor only guards q_i * tau underflow
+        return idx[:m], 1.0 / jnp.maximum(inclusion,
+                                          jnp.finfo(probs.dtype).tiny)
     return idx[:m], 1.0 / jnp.clip(inclusion, 1e-12, 1.0)
 
 

@@ -1,0 +1,341 @@
+"""Unified streaming tile-reduction engine with pluggable accumulation.
+
+Every streaming loop in this codebase reduces (or maps) row slabs of an
+(n, ...) array through a per-tile computation: the Nystrom normal equations
+(`nystrom.scan_normal_eq` and its mesh-sharded wrapper), the CIC deposit of
+the binned KDE (`kde.scatter_cic` and its per-chip twin in
+`core.distributed.kde_binned_sharded_multi`), and the batched predicts
+(`nystrom.predict_streaming[_multi]`).  Historically each re-implemented
+tiling, ragged-tail padding, sharding and accumulation by hand — every
+numerics fix (e.g. EXACT_DIST_D) had to land in four places.  This module
+owns that plumbing once:
+
+  * `tile_reduce`  — row-slab tiling, ragged-tail padding (sentinel rows for
+    kernel maps, zero rows + zero weights for deposits), a `lax.scan` over
+    the slabs, and a pluggable accumulator strategy;
+  * `tile_map`     — the same tiling for per-row outputs (predict);
+  * `mesh_reduce` / `mesh_map` — optional shard_map execution over the
+    "rows" logical axis (`repro.distributed.sharding`), with the accumulator
+    STATE — not the finalized value — crossing the psum.
+
+Accumulator strategies (`get(name)`):
+
+  * ``plain``       — the historical fp32 running sum.  Bit-equal to the
+    pre-engine hand-rolled loops (locked by tests/test_streaming_engine.py).
+  * ``compensated`` — Kahan/Neumaier two-float error-carrying sum: the carry
+    is a (hi, lo) pair per output leaf; each tile update is folded in with
+    an error-free two-sum and the rounding error is banked in lo.  The pair
+    survives the cross-chip psum (hi and lo reduce separately) and is only
+    collapsed by `finalize`.  Cross-tile accumulation error drops from
+    O(steps) * eps to the within-tile floor, which lets
+    `nystrom.solve_normal_eq` lower its spectral noise-floor cutoff by
+    `EPS_SCALE["compensated"]` and keep whitened directions that plain fp32
+    must truncate (ROADMAP: the fp32 scale ceiling).
+
+The same strategy runs inside the Pallas `gram` kernel body as a two-float
+VMEM accumulator (`repro.kernels.gram`), so the TPU path shares the lower
+noise floor; `repro.kernels.dispatch` threads ``accumulator=`` through both
+backends.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import pad_rows_sentinel, round_up
+
+Array = jax.Array
+
+ACCUMULATORS = ("plain", "compensated")
+
+# Residual accumulation-noise scale, relative to eps(dtype), that
+# `nystrom.solve_normal_eq` may assume for a Gram built by each strategy.
+# Plain fp32 accumulation noise sits at ~eps * lambda_max(G); the
+# compensated sum removes the cross-tile term, leaving the within-tile dot
+# rounding — measured ≳30x below the plain floor on the n ≥ 1e5 streams the
+# regression tests lock (tests/test_streaming_engine.py), so 1/32 is the
+# conservative factor by which the spectral truncation floor recedes.
+EPS_SCALE = {"plain": 1.0, "compensated": 1.0 / 32.0}
+
+
+def two_sum(a: Array, b: Array) -> tuple[Array, Array]:
+    """Error-free transformation: s fl= a + b, e = (a + b) - s exactly.
+
+    Knuth's branch-free TwoSum (6 flops); valid for any rounding direction
+    and magnitudes.  XLA does not reassociate float arithmetic, so the
+    cancellation pattern survives compilation on every backend.
+    """
+    s = a + b
+    bb = s - a
+    err = (a - (s - bb)) + (b - bb)
+    return s, err
+
+
+def _tree_add(acc, update):
+    return jax.tree.map(jnp.add, acc, update)
+
+
+class PlainAccumulator:
+    """The historical running sum; `state` IS the value."""
+
+    name = "plain"
+
+    def init(self, zeros):
+        return zeros
+
+    def add(self, state, update, combine):
+        return combine(state, update)
+
+    def psum(self, state, axes):
+        return jax.lax.psum(state, axes)
+
+    def finalize(self, state):
+        return state
+
+
+class CompensatedAccumulator:
+    """Kahan/Neumaier two-float sum; `state` is a (hi, lo) pair of trees.
+
+    Non-additive `combine`s (the CIC scatter) are folded in by materializing
+    the tile's dense delta against a zero value first — `combine` must
+    therefore satisfy combine(0, u) == the additive delta of u, which every
+    scatter/segment-sum update does.
+    """
+
+    name = "compensated"
+
+    def init(self, zeros):
+        return (zeros, jax.tree.map(jnp.zeros_like, zeros))
+
+    def add(self, state, update, combine):
+        hi, lo = state
+        if combine is _tree_add:
+            delta = update
+        else:
+            delta = combine(jax.tree.map(jnp.zeros_like, hi), update)
+        s = jax.tree.map(jnp.add, hi, delta)
+        err = jax.tree.map(
+            lambda h, d, ss: (h - (ss - (ss - h))) + (d - (ss - h)), hi,
+            delta, s)
+        return (s, jax.tree.map(jnp.add, lo, err))
+
+    def psum(self, state, axes):
+        # hi and lo reduce SEPARATELY: the pair crosses the collective
+        # un-collapsed, so per-chip compensation is not thrown away at the
+        # all-reduce (finalize folds the psummed lo back in).
+        return jax.lax.psum(state, axes)
+
+    def finalize(self, state):
+        hi, lo = state
+        return jax.tree.map(jnp.add, hi, lo)
+
+
+_STRATEGIES = {"plain": PlainAccumulator(), "compensated": CompensatedAccumulator()}
+
+
+def get(accumulator: str | Any) -> Any:
+    """Resolve an accumulator name ('plain' | 'compensated') or instance."""
+    if isinstance(accumulator, str):
+        try:
+            return _STRATEGIES[accumulator]
+        except KeyError:
+            raise ValueError(f"unknown accumulator {accumulator!r}; "
+                             f"pick from {ACCUMULATORS}") from None
+    return accumulator
+
+
+def eps_scale(accumulator: str | Any, steps: int | None = None) -> float:
+    """Noise-floor scale for `nystrom.solve_normal_eq` (see EPS_SCALE).
+
+    Compensation removes only the CROSS-TILE accumulation error, so the
+    floor may recede by at most the number of scan steps the stream ran:
+    with `steps` given, the compensated scale is max(1/32, 1/steps) — a
+    single-tile stream (steps == 1) has nothing to compensate and keeps the
+    plain floor (lowering it there would retain directions whose fp32
+    content is within-dot / kernel-eval noise the two-float sum never
+    touched — empirically WORSE than plain at small n).
+    """
+    name = accumulator if isinstance(accumulator, str) else accumulator.name
+    scale = EPS_SCALE.get(name, 1.0)
+    if steps is not None and scale < 1.0:
+        scale = max(scale, 1.0 / max(int(steps), 1))
+    return scale
+
+
+# ------------------------------------------------------------------ tiling --
+
+def _pad_rows(x: Array, rows: int, pad: str) -> Array:
+    if pad == "sentinel":
+        return pad_rows_sentinel(x, rows)
+    if pad == "zero":
+        return jnp.pad(x, ((0, rows - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+    raise ValueError(f"unknown pad mode {pad!r}; pick 'sentinel' or 'zero'")
+
+
+def _tiles(x: Array, t: int, np_: int, pad: str) -> Array:
+    return _pad_rows(x, np_, pad).reshape((np_ // t, t) + x.shape[1:])
+
+
+def tile_reduce(
+    emit: Callable[..., Any],
+    x: Array,
+    aux: Sequence[Array] = (),
+    *,
+    tile: int | None,
+    init: Any,
+    combine: Callable[[Any, Any], Any] | None = None,
+    accumulator: str | Any = "plain",
+    pad: str = "sentinel",
+    finalize: bool = True,
+) -> Any:
+    """Reduce `tile`-row slabs of x (+ row-aligned aux arrays) into `init`.
+
+    ``emit(x_tile, *aux_tiles)`` produces the tile's update;
+    ``combine(value, update)`` folds it into the running value (default:
+    leafwise add — the Gram case; pass a scatter for deposits).  Ragged
+    tails are padded per ``pad`` ("sentinel" parks extra rows at the
+    ROW_SENTINEL coordinate so kernel maps evaluate to exactly 0; "zero"
+    zero-pads — deposits must then carry a zero-padded weight aux so padded
+    rows deposit nothing).  aux arrays are always zero-padded.
+
+    ``accumulator`` picks the strategy (module docstring).  With
+    ``finalize=False`` the raw accumulator state is returned — the form
+    `mesh_reduce` psums across chips.  A whole-array slab still runs as a
+    one-step `lax.scan`: the scan body is compiled as one fused computation
+    exactly like the historical hand-rolled loops, which is what makes
+    plain mode bit-equal to them (an eager shortcut would round FMA-fused
+    subexpressions differently on CPU).
+    """
+    acc = get(accumulator)
+    combine = combine if combine is not None else _tree_add
+    n = x.shape[0]
+    t = min(tile, n) if tile else n
+    state = acc.init(init)
+    np_ = round_up(n, t)
+    slabs = (_tiles(x, t, np_, pad),) + tuple(
+        _tiles(a, t, np_, "zero") for a in aux)
+
+    def step(carry, slab):
+        return acc.add(carry, emit(*slab), combine), None
+
+    state, _ = jax.lax.scan(step, state, slabs)
+    return acc.finalize(state) if finalize else state
+
+
+def tile_map(
+    fn: Callable[[Array], Array],
+    x: Array,
+    *,
+    tile: int,
+    pad: str = "sentinel",
+) -> Array:
+    """Map `fn` over `tile`-row slabs of x; returns the stacked (n, ...) out.
+
+    The (tile, ...) slab output dies with each `lax.map` step, so peak
+    transient memory is O(tile * out_cols) regardless of n — the predict
+    contract (`nystrom.predict_streaming`).
+    """
+    n = x.shape[0]
+    t = min(tile, n)
+    np_ = round_up(n, t)
+    out = jax.lax.map(fn, _tiles(x, t, np_, pad))
+    return out.reshape((np_,) + out.shape[2:])[:n]
+
+
+# -------------------------------------------------------------------- mesh --
+
+def _active_rows(shape):
+    """(mesh, rows_axes) when the active mesh's "rows" rule divides dim 0."""
+    from repro.distributed import sharding as shd
+    act = shd.active()
+    if act is None:
+        return None, None
+    axes = act.spec(("rows",) + (None,) * (len(shape) - 1), shape)[0]
+    return (act.mesh, axes) if axes is not None else (None, None)
+
+
+def _row_spec(axes, ndim: int):
+    from jax.sharding import PartitionSpec as P
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def row_shard_count(shape) -> int:
+    """How many chips the "rows" rule splits dim 0 of `shape` across (1
+    with no active mesh / non-dividing axis).  Callers sizing per-chip work
+    — e.g. the scan-step count behind `eps_scale` — must divide by this:
+    each chip streams only n/C rows, so a stream that is one tile PER CHIP
+    has no cross-tile error to compensate even when the global n spans
+    several tiles."""
+    mesh, axes = _active_rows(shape)
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    count = 1
+    for a in (axes,) if isinstance(axes, str) else tuple(axes):
+        count *= sizes[a]
+    return count
+
+
+def mesh_reduce(
+    local: Callable[..., Any],
+    row_args: Sequence[Array],
+    rep_args: Sequence[Array] = (),
+    *,
+    accumulator: str | Any = "plain",
+    finalize: bool = True,
+) -> Any:
+    """Row-sharded reduction: psum `local`'s accumulator state across chips.
+
+    ``local(*row_slabs, *rep_args)`` must return accumulator STATE (i.e. it
+    ran its own `tile_reduce`/backend kernel with ``finalize=False``).
+    Under an active mesh whose "rows" rule divides the leading dim, each
+    device reduces its local row slab and the state is psum-reduced — for
+    "compensated" the (hi, lo) pair crosses the collective un-collapsed.
+    Otherwise `local` runs once on the full arrays (transparent no-op).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    acc = get(accumulator)
+    mesh, axes = _active_rows(row_args[0].shape)
+    if mesh is None:
+        state = local(*row_args, *rep_args)
+        return acc.finalize(state) if finalize else state
+    ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+
+    def body(*args):
+        return acc.psum(local(*args), ax_tuple)
+
+    in_specs = tuple(_row_spec(axes, a.ndim) for a in row_args) + tuple(
+        P(*([None] * a.ndim)) for a in rep_args)
+    state = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P())(
+        *row_args, *rep_args)
+    return acc.finalize(state) if finalize else state
+
+
+def mesh_map(
+    local: Callable[..., Array],
+    x: Array,
+    rep_args: Sequence[Array] = (),
+    *,
+    out_rank: int = 1,
+) -> Array:
+    """Row-sharded map: `local(x_loc, *rep_args)` -> (n_loc, ...) per chip.
+
+    Embarrassingly row-parallel (no collective); `out_rank` is the rank of
+    local's output, whose leading dim stays row-sharded.  With no active
+    mesh (or a non-dividing axis) this is `local(x, *rep_args)`.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh, axes = _active_rows(x.shape)
+    if mesh is None:
+        return local(x, *rep_args)
+    in_specs = (_row_spec(axes, x.ndim),) + tuple(
+        P(*([None] * a.ndim)) for a in rep_args)
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
+                     out_specs=_row_spec(axes, out_rank))(x, *rep_args)

@@ -55,43 +55,64 @@ def kernel_matrix(kernel: core_kernels.Kernel, x: Array,
 def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
                     w: Array, *, backend: str | None = None,
                     tile: int = 8192, interpret: bool | None = None,
-                    **kw) -> tuple[Array, Array]:
+                    accumulator: str = "plain", finalize: bool = True,
+                    **kw) -> tuple:
     """(K_nm^T K_nm, K_nm^T w) through the resolved backend.
 
     The Pallas path is the fused one-pass `gram` kernel (row block <= 256,
-    set by the MXU tiling); the XLA path is the lax.scan row-tile
-    accumulation in `repro.core.nystrom` with `tile` rows per step.  Neither
-    ever materializes the (n, m) cross-kernel matrix.
+    set by the MXU tiling); the XLA path is the engine-tiled row-slab
+    accumulation in `repro.core.nystrom` (`streaming.tile_reduce`) with
+    `tile` rows per step.  Neither ever materializes the (n, m)
+    cross-kernel matrix.
+
+    Both backends implement the same ``accumulator`` strategies
+    (`repro.core.streaming`): "plain" (historical fp32 running sum) and
+    "compensated" (two-float error-carrying sum — a two-float VMEM
+    accumulator inside the Pallas body).  ``finalize=False`` returns the
+    raw accumulator state for a cross-chip psum (`streaming.mesh_reduce`).
     """
     if resolve(backend) == "pallas":
         from repro.kernels.gram import ops as gram_ops
-        return gram_ops.gram_matrix(kernel, x, y, w, interpret=interpret, **kw)
+        return gram_ops.gram_matrix(kernel, x, y, w, interpret=interpret,
+                                    accumulator=accumulator,
+                                    finalize=finalize, **kw)
     from repro.core import nystrom
-    return nystrom.scan_normal_eq(kernel, x, y, w, tile=tile)
+    return nystrom.scan_normal_eq(kernel, x, y, w, tile=tile,
+                                  accumulator=accumulator, finalize=finalize)
 
 
 def binned_scatter(data: Array, lo: Array, spacing: Array, grid_size: int,
                    *, backend: str | None = None, weights: Array | None = None,
                    tile: int | None = None,
-                   interpret: bool | None = None) -> Array:
+                   interpret: bool | None = None,
+                   accumulator: str = "plain", finalize: bool = True):
     """Cloud-in-cell deposit onto a (grid_size,)^d grid, resolved backend.
 
     The deposit stage of the binned KDE (`repro.core.kde.kde_binned`).  The
     Pallas path (`repro.kernels.kde_binned`) keeps the grid VMEM-resident
     and streams row tiles through it; the XLA path is the windowed
-    scatter-add in `repro.core.kde.scatter_cic` (one update per point, a
-    lax.scan over `tile`-row slabs).  Both match the corner-loop oracle
-    `repro.kernels.kde_binned.ref.binned_grid` to reduction-order tolerance.
+    scatter-add in `repro.core.kde.scatter_cic` (one update per point,
+    engine-tiled `tile`-row slabs via `streaming.tile_reduce`).  Both match
+    the corner-loop oracle `repro.kernels.kde_binned.ref.binned_grid` to
+    reduction-order tolerance.
+
+    ``accumulator="compensated"`` carries the grid as a two-float (hi, lo)
+    pair across tiles; it is served by the XLA engine path — the Pallas
+    deposit kernel is plain-only (its serial per-point fori_loop has no
+    tile-delta to compensate), so compensated requests route to XLA.
+    ``finalize=False`` returns the accumulator state for a mesh psum
+    (`core.distributed.kde_binned_sharded_multi`).
 
     The deposit is bandwidth-independent (only the grid geometry enters),
     which is why `kde.kde_binned_multi` / the CalibrateStage bandwidth sweep
     call this ONCE per grid and amortize it across every h candidate — keep
     that contract if you add state to either backend.
     """
-    if resolve(backend) == "pallas":
+    if resolve(backend) == "pallas" and accumulator == "plain":
         from repro.kernels.kde_binned import ops as kb_ops
         return kb_ops.binned_scatter(data, lo, spacing, grid_size,
                                      weights=weights, interpret=interpret)
     from repro.core import kde as core_kde
     return core_kde.scatter_cic(data, lo, spacing, grid_size,
-                                weights=weights, tile=tile)
+                                weights=weights, tile=tile,
+                                accumulator=accumulator, finalize=finalize)

@@ -19,7 +19,13 @@ the MXU rank-bm update of the Gram block:
     tile the diagonal already has instead of spending the k == 0 pass on it;
   * VMEM per program at d=128, bm=bn=256: x (bm, d) + 2 y-tiles (bn, d)
     + 2 kernel tiles (bm, bn) + G block (bn, bn) fp32 ~= 1.1 MB — far under
-    budget, so the row stream double-buffers.
+    budget, so the row stream double-buffers;
+  * ``compensated=True`` accumulates G and rhs as two-float (hi, lo) VMEM
+    pairs (`repro.core.streaming` semantics in-kernel): each rank-bm update
+    is folded in with Knuth's TwoSum and the rounding error banked in the
+    lo block — the cross-tile fp32 accumulation error disappears, which is
+    what lets `nystrom.solve_normal_eq` lower its spectral truncation floor
+    on the TPU path exactly like the XLA engine path.
 
 Padded rows are placed at the ROW_SENTINEL coordinate by ops.py: their
 distance to any real landmark is ~1e6, and every kernel map underflows
@@ -71,8 +77,25 @@ def _kernel_tile(x, y, *, kind: str, nu: float, a: float,
     return (1.0 + ar + ar * ar * (1.0 / 3.0)) * jnp.exp(-ar)  # nu == 2.5
 
 
-def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *, kind: str,
-               nu: float, a: float, inv_two_sigma_sq: float, exact_d: int):
+def _two_sum_store(hi_ref, lo_ref, update):
+    """Fold `update` into the (hi, lo) two-float VMEM accumulator.
+
+    Knuth TwoSum against the resident hi block, banking the rounding error
+    in lo — the VMEM form of `repro.core.streaming.two_sum`.  Mosaic/XLA do
+    not reassociate float arithmetic, so the cancellation pattern survives.
+    """
+    hi = hi_ref[...]
+    s = hi + update
+    bb = s - hi
+    err = (hi - (s - bb)) + (update - bb)
+    hi_ref[...] = s
+    lo_ref[...] += err
+
+
+def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *refs, kind: str,
+               nu: float, a: float, inv_two_sigma_sq: float, exact_d: int,
+               compensated: bool):
+    gl_ref, rl_ref = refs if compensated else (None, None)
     k = pl.program_id(1)
     i = pl.program_id(2)
     # f32 compute floor; preserves f64 when fed f64 (interpret-mode parity
@@ -91,28 +114,40 @@ def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *, kind: str,
     @pl.when(i == 0)
     def _():
         g_ref[...] = jnp.zeros_like(g_ref)
+        if compensated:
+            gl_ref[...] = jnp.zeros_like(gl_ref)
 
-    g_ref[...] += jax.lax.dot_general(    # rank-bm MXU update of G[j, k]
+    g_up = jax.lax.dot_general(           # rank-bm MXU update of G[j, k]
         kj, kk, (((0,), (0,)), ((), ())), preferred_element_type=acc
     ).astype(g_ref.dtype)
+    if compensated:
+        _two_sum_store(g_ref, gl_ref, g_up)
+    else:
+        g_ref[...] += g_up
 
     @pl.when(jnp.logical_and(i == 0, k == 0))
     def _():
         r_ref[...] = jnp.zeros_like(r_ref)
+        if compensated:
+            rl_ref[...] = jnp.zeros_like(rl_ref)
 
     @pl.when(j == k)
     def _():
         w = w_ref[...].astype(acc)     # (bm, 1)
-        r_ref[...] += jax.lax.dot_general(
+        r_up = jax.lax.dot_general(
             kj, w, (((0,), (0,)), ((), ())),
             preferred_element_type=acc,
         ).astype(r_ref.dtype)
+        if compensated:
+            _two_sum_store(r_ref, rl_ref, r_up)
+        else:
+            r_ref[...] += r_up
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "nu", "a", "sigma", "bm", "bn", "out_dtype",
-                     "interpret", "exact_d"),
+                     "interpret", "exact_d", "compensated"),
 )
 def gram_padded(
     x: Array,
@@ -128,8 +163,15 @@ def gram_padded(
     out_dtype=jnp.float32,
     interpret: bool = False,
     exact_d: int = 0,
-) -> tuple[Array, Array]:
-    """Core pallas_call; requires n % bm == 0 and m % bn == 0 (see ops.py)."""
+    compensated: bool = False,
+) -> tuple[Array, ...]:
+    """Core pallas_call; requires n % bm == 0 and m % bn == 0 (see ops.py).
+
+    ``compensated=True`` doubles the output blocks: (G_hi, rhs_hi, G_lo,
+    rhs_lo), the two-float VMEM accumulator pair (each (j, k) hi/lo block
+    pair stays resident while the row stream passes; VMEM cost is one extra
+    (bn, bn) + (bn, 1) block — still far under budget at bm=bn=256).
+    """
     n, d = x.shape
     m, _ = y.shape
     assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
@@ -141,7 +183,25 @@ def gram_padded(
         a=float(a),
         inv_two_sigma_sq=1.0 / (2.0 * float(sigma) ** 2),
         exact_d=int(exact_d),
+        compensated=compensated,
     )
+    out_specs = [
+        pl.BlockSpec((bn, bn), lambda j, k, i: (j, k)),      # G block
+        pl.BlockSpec((bn, 1), lambda j, k, i: (j, 0)),       # rhs block
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, m), out_dtype),
+        jax.ShapeDtypeStruct((m, 1), out_dtype),
+    ]
+    if compensated:
+        out_specs = out_specs + [
+            pl.BlockSpec((bn, bn), lambda j, k, i: (j, k)),  # G_lo block
+            pl.BlockSpec((bn, 1), lambda j, k, i: (j, 0)),   # rhs_lo block
+        ]
+        out_shape = out_shape + [
+            jax.ShapeDtypeStruct((m, m), out_dtype),
+            jax.ShapeDtypeStruct((m, 1), out_dtype),
+        ]
     return pl.pallas_call(
         body,
         grid=grid,
@@ -151,13 +211,7 @@ def gram_padded(
             pl.BlockSpec((bn, d), lambda j, k, i: (k, 0)),   # landmarks k
             pl.BlockSpec((bm, 1), lambda j, k, i: (i, 0)),   # responses
         ],
-        out_specs=[
-            pl.BlockSpec((bn, bn), lambda j, k, i: (j, k)),  # G block
-            pl.BlockSpec((bn, 1), lambda j, k, i: (j, 0)),   # rhs block
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, m), out_dtype),
-            jax.ShapeDtypeStruct((m, 1), out_dtype),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(x, y, y, w)

@@ -32,7 +32,7 @@ def _pad(x: Array, rows: int, cols: int) -> Array:
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "nu", "a", "sigma", "bm", "bn", "out_dtype",
-                     "interpret", "use_pallas"),
+                     "interpret", "use_pallas", "accumulator", "finalize"),
 )
 def gram(
     x: Array,
@@ -48,7 +48,9 @@ def gram(
     out_dtype=None,
     interpret: bool | None = None,
     use_pallas: bool = True,
-) -> tuple[Array, Array]:
+    accumulator: str = "plain",
+    finalize: bool = True,
+) -> tuple:
     """(n, d), (m, d), (n,) -> (K_nm^T K_nm (m, m), K_nm^T w (m,)).
 
     K_nm is never materialized: the Pallas kernel streams (bm, bn) tiles
@@ -56,13 +58,27 @@ def gram(
     falls back to the dense reference (oracle; small n only); interpret=None
     resolves to True off-TPU so the Pallas path is always runnable.
     out_dtype=None accumulates in the promoted input dtype (f32 floor).
+
+    ``accumulator="compensated"`` runs the two-float VMEM accumulator body
+    (`repro.core.streaming` semantics in-kernel): the G/rhs error sums ride
+    as extra output blocks.  ``finalize=False`` returns the raw accumulator
+    state — plain: (g, r); compensated: ((g, r), (g_lo, r_lo)) — the form
+    `streaming.mesh_reduce` psums across chips; otherwise the pair is
+    collapsed to (g + g_lo, r + r_lo).
     """
+    from repro.core import streaming
+
+    acc = streaming.get(accumulator)
+    compensated = acc.name == "compensated"
     if out_dtype is None:
         out_dtype = jnp.promote_types(x.dtype, jnp.float32)
     if not use_pallas:
         g, r = ref.gram(x, y, w, kind=kind, nu=nu, a=a, sigma=sigma,
                         out_dtype=out_dtype)
-        return g, r
+        # the dense oracle is one fused dot: no cross-tile error to carry
+        state = ((g, r), (jnp.zeros_like(g), jnp.zeros_like(r))) \
+            if compensated else (g, r)
+        return acc.finalize(state) if finalize else state
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n, d = x.shape
@@ -71,18 +87,25 @@ def gram(
     bn_ = min(bn, round_up(m, 128 if not interpret else 8))
     np_, mp = round_up(n, bm_), round_up(m, bn_)
     dp = round_up(d, 128) if not interpret else d
-    g, r = gk.gram_padded(
+    out = gk.gram_padded(
         _pad(x, np_, dp),
         jnp.pad(y, ((0, mp - m), (0, dp - d))),
         jnp.pad(w.astype(out_dtype)[:, None], ((0, np_ - n), (0, 0))),
         kind=kind, nu=nu, a=a, sigma=sigma, bm=bm_, bn=bn_,
         out_dtype=out_dtype, interpret=interpret,
         exact_d=d if d <= EXACT_DIST_D else 0,
+        compensated=compensated,
     )
-    return g[:m, :m], r[:m, 0]
+    if compensated:
+        g, r, gl, rl = out
+        state = ((g[:m, :m], r[:m, 0]), (gl[:m, :m], rl[:m, 0]))
+    else:
+        g, r = out
+        state = (g[:m, :m], r[:m, 0])
+    return acc.finalize(state) if finalize else state
 
 
 def gram_matrix(kernel: core_kernels.Kernel, x: Array, y: Array, w: Array,
-                **kw) -> tuple[Array, Array]:
+                **kw) -> tuple:
     """Adapter taking a repro.core.kernels kernel object (Pallas path)."""
     return gram(x, y, w, **kernel_params(kernel), **kw)

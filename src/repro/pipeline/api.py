@@ -94,6 +94,10 @@ class PipelineConfig:
     # execution
     tile: int = 8192                  # rows per streaming slab
     backend: str = "auto"             # auto | xla | pallas (dispatch.resolve)
+    # streaming-accumulation strategy (repro.core.streaming): "plain" is the
+    # historical fp32 running sum, "compensated" the two-float (Kahan)
+    # error-carrying sum — lower Gram noise floor, ~2 extra adds per tile
+    accumulator: str = "plain"        # plain | compensated
     seed: int = 0
 
     def build_kernel(self) -> kernels.Kernel:
@@ -249,19 +253,28 @@ class SAKRRPipeline:
         cal_stages = self._completed_eval_stages()
         if not any(isinstance(s, stages_mod.CalibrateStage)
                    for s in cal_stages):
+            # mirror ALL of the SolveStage's per-stage overrides (backend,
+            # tile, weighted, accumulator) so every candidate is scored
+            # under the same solve configuration the winning refit will use
+            solve = self._solve_stage()
             cal_stages.insert(0, stages_mod.CalibrateStage(
-                backend=self._predict_backend(), tile=self._predict_tile()))
+                backend=self._predict_backend(), tile=self._predict_tile(),
+                weighted=solve.weighted if solve is not None else False,
+                accumulator=solve.accumulator if solve is not None else None))
         stages_mod.run_stages(cal_stages, ctx)
         self._snapshot(ctx)
         return dict(ctx.cv_best or {}, cv_scores=ctx.cv_scores,
                     scores=dict(ctx.scores or {}))
 
     # -------------------------------------------------------------- predict --
+    def _solve_stage(self) -> "stages_mod.SolveStage | None":
+        return next((s for s in self.stages
+                     if isinstance(s, stages_mod.SolveStage)), None)
+
     def _predict_backend(self) -> str | None:
         # honor the SolveStage's per-stage overrides so fit and predict run
         # the same backend/tile unless the caller says otherwise
-        solve = next((s for s in self.stages
-                      if isinstance(s, stages_mod.SolveStage)), None)
+        solve = self._solve_stage()
         return (solve.backend if solve is not None and
                 solve.backend is not None
                 else stages_mod.resolve_backend(self.config))
@@ -269,8 +282,7 @@ class SAKRRPipeline:
     def _predict_tile(self, tile: int | None = None) -> int:
         if tile is not None:
             return tile
-        solve = next((s for s in self.stages
-                      if isinstance(s, stages_mod.SolveStage)), None)
+        solve = self._solve_stage()
         return (solve.tile if solve is not None and solve.tile is not None
                 else self.config.tile)
 

@@ -131,13 +131,15 @@ class DensityStage(Stage):
 
     def __init__(self, *, method: str | None = None, h: float | None = None,
                  grid_size: int | None = None, backend: str | None = None,
-                 tile: int | None = None, sharded: bool | None = None):
+                 tile: int | None = None, sharded: bool | None = None,
+                 accumulator: str | None = None):
         self.method = method
         self.h = h
         self.grid_size = grid_size
         self.backend = backend
         self.tile = tile
         self.sharded = sharded
+        self.accumulator = accumulator
 
     def run(self, ctx: StageContext) -> None:
         from repro.distributed import sharding as shd
@@ -148,6 +150,7 @@ class DensityStage(Stage):
                      or kde.default_grid_size(ctx.d))
         backend = self.backend if self.backend is not None else _backend(cfg)
         tile = self.tile if self.tile is not None else cfg.kde_tile
+        accumulator = self.accumulator or _accumulator(cfg)
         # bandwidth resolution: stage override > calibrated ctx.bandwidth >
         # config > Scott's rule (the pre-calibration default)
         h = self.h if self.h is not None else ctx.bandwidth
@@ -163,11 +166,11 @@ class DensityStage(Stage):
             lo, hi = kde.binned_bounds(ctx.x, ctx.x, h)
             ctx.densities = dist.kde_binned_sharded(
                 ctx.x, h, grid_size=grid_size, lo=lo, hi=hi, tile=tile,
-                backend=backend)
+                backend=backend, accumulator=accumulator)
         else:
             ctx.densities = kde.estimate_densities(
                 ctx.x, h=h, method=method, grid_size=grid_size,
-                backend=backend, tile=tile)
+                backend=backend, tile=tile, accumulator=accumulator)
 
 
 class PrecomputedDensityStage(Stage):
@@ -254,17 +257,23 @@ class SolveStage(Stage):
     (`nystrom.weighted_normal_eq`).  The SoR predictor is invariant to the
     rescaling in exact arithmetic, so this is off by default — fp32
     whitening order shifts results slightly and the unweighted solve is the
-    parity oracle for the dense path."""
+    parity oracle for the dense path.
+
+    ``accumulator`` ("plain" | "compensated", default from the config)
+    picks the `repro.core.streaming` Gram-accumulation strategy; the
+    compensated two-float sum also lowers the solve's spectral truncation
+    floor (`nystrom.solve_normal_eq(eps_scale=...)`)."""
 
     name = "solve"
     requires = ("landmark_idx",)
     provides = ("fit",)
 
     def __init__(self, *, backend: str | None = None, tile: int | None = None,
-                 weighted: bool = False):
+                 weighted: bool = False, accumulator: str | None = None):
         self.backend = backend
         self.tile = tile
         self.weighted = weighted
+        self.accumulator = accumulator
 
     def run(self, ctx: StageContext) -> None:
         cfg = ctx.config
@@ -273,7 +282,8 @@ class SolveStage(Stage):
             ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
             tile=self.tile if self.tile is not None else cfg.tile,
             backend=self.backend if self.backend is not None else _backend(cfg),
-            jitter=cfg.jitter, weights=weights)
+            jitter=cfg.jitter, weights=weights,
+            accumulator=self.accumulator or _accumulator(cfg))
 
 
 class PredictStage(Stage):
@@ -382,8 +392,10 @@ class CalibrateStage(Stage):
     fold: a deterministic holdout split (``val_fraction``, seeded by the
     config; the train side is rounded to divide an active mesh so the Gram
     psum stays sharded), per-h densities -> SA leverage at the reference
-    ctx.lam -> one landmark draw (same key every h: candidates differ by
-    their OWN knob, not sampling noise) -> multi-lam fit -> multi-lam
+    ctx.lam -> one landmark draw per h sharing ONE Gumbel race (the noise
+    is drawn once and passed to every draw via ``gumbel=``, so the h axis
+    of the sweep differs only through the probs — zero sampling noise
+    between candidates, ROADMAP gap (e)) -> multi-lam fit -> multi-lam
     validation MSE.  Emits `ctx.cv_scores` (one record per (h, lam) with
     val_mse/val_rmse and the per-h fit/block seconds), `ctx.cv_best`, and
     REWRITES ``ctx.lam`` / ``ctx.bandwidth`` so every downstream stage
@@ -399,13 +411,14 @@ class CalibrateStage(Stage):
                  h_grid: Sequence[float] | None = None,
                  val_fraction: float | None = None,
                  backend: str | None = None, tile: int | None = None,
-                 weighted: bool = False):
+                 weighted: bool = False, accumulator: str | None = None):
         self.lam_grid = lam_grid
         self.h_grid = h_grid
         self.val_fraction = val_fraction
         self.backend = backend
         self.tile = tile
         self.weighted = weighted
+        self.accumulator = accumulator
 
     # ------------------------------------------------------------ helpers --
     def _grids(self, ctx: StageContext) -> tuple[list[float], list[float]]:
@@ -456,15 +469,17 @@ class CalibrateStage(Stage):
         grid_size = cfg.kde_grid_size or kde.default_grid_size(ctx.d)
         backend = self.backend if self.backend is not None else _backend(cfg)
         tile = cfg.kde_tile
+        accumulator = self.accumulator or _accumulator(cfg)
         h_max = jnp.asarray(max(h_grid), x_tr.dtype)
         lo, hi = kde.binned_bounds(x_tr, x_tr, h_max)
         if shd.active() is not None:
             from repro.core import distributed as dist
             return dist.kde_binned_sharded_multi(
                 x_tr, h_grid, grid_size=grid_size, lo=lo, hi=hi, tile=tile,
-                backend=backend)
+                backend=backend, accumulator=accumulator)
         return kde.kde_binned_multi(x_tr, x_tr, h_grid, grid_size,
-                                    lo=lo, hi=hi, backend=backend, tile=tile)
+                                    lo=lo, hi=hi, backend=backend, tile=tile,
+                                    accumulator=accumulator)
 
     # ---------------------------------------------------------------- run --
     def run(self, ctx: StageContext) -> None:
@@ -476,6 +491,7 @@ class CalibrateStage(Stage):
         n_tr = int(x_tr.shape[0])
         tile = self.tile if self.tile is not None else cfg.tile
         backend = self.backend if self.backend is not None else _backend(cfg)
+        accumulator = self.accumulator or _accumulator(cfg)
 
         t0 = time.perf_counter()
         dens = self._densities_multi(ctx, x_tr, h_grid)
@@ -483,6 +499,12 @@ class CalibrateStage(Stage):
         kde_s = time.perf_counter() - t0
 
         key = jax.random.PRNGKey(cfg.seed)
+        # ONE Gumbel race for the whole bandwidth grid: every h's landmark
+        # draw perturbs its own probs with the SAME noise, so the h axis of
+        # the sweep carries zero sampling noise (drawn once here instead of
+        # re-derived from the key inside every per-h call)
+        race_dtype = jnp.promote_types(ctx.x.dtype, jnp.float32)
+        race = jax.random.gumbel(key, (n_tr,), dtype=race_dtype)
         records: list[dict] = []
         for i, h in enumerate(h_grid):
             t_h = time.perf_counter()
@@ -498,12 +520,13 @@ class CalibrateStage(Stage):
                 weights = None
             else:
                 idx, weights = sampling.sample_weighted_without_replacement(
-                    key, lev.probs, m)
+                    key, lev.probs, m, gumbel=race)
             t1 = time.perf_counter()
             fits = nystrom.fit_streaming_multi(
                 ctx.kernel, x_tr, y_tr, lam_grid, idx,
                 tile=tile, backend=backend, jitter=cfg.jitter,
-                weights=weights if self.weighted else None)
+                weights=weights if self.weighted else None,
+                accumulator=accumulator)
             jax.block_until_ready(fits[0].beta)
             fit_s = time.perf_counter() - t1
             preds = nystrom.predict_streaming_multi(ctx.kernel, fits, x_val,
@@ -567,4 +590,11 @@ def resolve_backend(cfg: Any) -> str | None:
     return None if cfg.backend == "auto" else cfg.backend
 
 
-_backend = resolve_backend   # module-internal shorthand
+def resolve_accumulator(cfg: Any) -> str:
+    """Config accumulation strategy (repro.core.streaming); older configs
+    without the field mean the historical plain running sum."""
+    return getattr(cfg, "accumulator", None) or "plain"
+
+
+_backend = resolve_backend       # module-internal shorthand
+_accumulator = resolve_accumulator

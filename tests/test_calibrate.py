@@ -183,6 +183,36 @@ def test_pipeline_calibrate_end_to_end():
     assert out["scores"]["risk"] <= ref["risk"] * 1.5
 
 
+def test_calibrate_shares_one_gumbel_race_across_h():
+    """The bandwidth grid's landmark draws must all receive the SAME
+    precomputed Gumbel race (gumbel=), so the h axis of the sweep carries
+    zero sampling noise (ROADMAP gap (e)): candidates differ only through
+    their density-driven probs."""
+    from repro.core import sampling as sampling_mod
+    from repro.pipeline import stages as stages_mod
+
+    data = _data(n=1024, seed=9)
+    cfg = PipelineConfig(num_landmarks=32, tile=256, h_grid=(0.15, 0.3, 0.6))
+    ctx = StageContext(config=cfg, kernel=cfg.build_kernel(), x=data.x,
+                       y=data.y, n=1024, d=3, lam=cfg.resolve_lam(1024),
+                       num_landmarks=32)
+    seen: list = []
+    real = sampling_mod.sample_weighted_without_replacement
+
+    def spy(key, probs, m, **kw):
+        seen.append(kw.get("gumbel"))
+        return real(key, probs, m, **kw)
+
+    stages_mod.sampling.sample_weighted_without_replacement = spy
+    try:
+        CalibrateStage()(ctx)
+    finally:
+        stages_mod.sampling.sample_weighted_without_replacement = real
+    assert len(seen) == 3                      # one draw per h candidate
+    assert all(g is not None for g in seen)    # explicit shared race
+    assert all(g is seen[0] for g in seen)     # the SAME noise object
+
+
 # ------------------------------------------------------------ mesh sharing --
 
 def test_calibrate_fold_under_mesh_shares_gram_and_deposit():

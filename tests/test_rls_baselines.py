@@ -52,6 +52,42 @@ def test_bless_correlates_with_exact():
     assert 0.5 < np.median(r) < 2.0
 
 
+def test_race_sketch_sizes_are_deterministic():
+    """RC/BLESS sketches are Gumbel-top-k races now, not Bernoulli draws:
+    the sketch SIZE is k = round(sum inclusion) — a function of the
+    leverage profile, not of the inclusion coin flips — so repeated runs
+    (same seed) reproduce it exactly and the `--compare` bench's
+    sketch_size/d_proj rows stop wobbling."""
+    n = 600
+    data = krr_data.bimodal_1d_paper(jax.random.PRNGKey(3), n)
+    lam = 0.45 * n ** -0.8
+    for est in (rls.recursive_rls, rls.bless):
+        a = est(KERN, data.x, lam, seed=0)
+        b = est(KERN, data.x, lam, seed=0)
+        assert a.sketch_size == b.sketch_size > 0
+        np.testing.assert_array_equal(np.asarray(a.leverage),
+                                      np.asarray(b.leverage))
+
+
+def test_race_sketch_weights_match_bernoulli_convention():
+    """The race sketch's weights are inverse-inclusion estimates (>= 1 up
+    to the threshold noise) consumed by the same weighted projection
+    estimator; on a flat inclusion profile the race reduces to uniform-ish
+    sampling with k = round(sum pi)."""
+    rng = np.random.default_rng(0)
+    inclusion = np.full(200, 0.25)
+    idx, w = rls._race_sketch(rng, inclusion)
+    assert idx.shape[0] == 50                 # deterministic: 200 * 0.25
+    assert len(np.unique(idx)) == 50          # distinct (without replacement)
+    assert np.all(w > 0)
+    # unbiasedness of the estimated sizes: E[sum w over sketch] ~ n
+    totals = []
+    for seed in range(20):
+        i, wi = rls._race_sketch(np.random.default_rng(seed), inclusion)
+        totals.append(wi.sum())
+    assert abs(np.mean(totals) - 200) / 200 < 0.15, np.mean(totals)
+
+
 def test_uniform_baseline():
     u = rls.uniform(50)
     np.testing.assert_allclose(np.asarray(u.probs), 1.0 / 50)
