@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kernels as K
-from repro.core import leverage
+from repro.core import leverage, streaming
 from repro.distributed.sharding import constrain
 
 Array = jax.Array
@@ -199,14 +199,26 @@ def sa_nystrom_pipeline(
     k_nm = constrain(k_nm, ("batch", None))    # (n_loc-sharded, m)
     k_mm = kernel(xm, xm)
     m = xm.shape[0]
-    lhs = jax.lax.dot_general(                 # fp32 accumulation on the MXU
-        k_nm, k_nm, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32) + n * lam * k_mm
+
+    # Fused dense normal equations through the streaming engine: a one-step
+    # (tile=None) `tile_reduce` whose emit is the pair of fp32-accumulated
+    # MXU dot_generals the historical inline path ran — the scan body
+    # compiles to the same fused computation (zero-init add is exact), and
+    # GSPMD still turns the n-axis contraction into the one big all-reduce.
+    def emit(k_tile, y_tile):
+        g = jax.lax.dot_general(k_tile, k_tile, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        r = jax.lax.dot_general(k_tile, y_tile, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        return g, r
+
+    g, rhs = streaming.tile_reduce(
+        emit, k_nm, (y.astype(knm_dtype),), tile=None,
+        init=(jnp.zeros((m, m), jnp.float32), jnp.zeros((m,), jnp.float32)),
+        pad="zero")
+    lhs = g + n * lam * k_mm
     scale = jnp.trace(lhs) / m
     lhs = lhs + (1e-6 * scale) * jnp.eye(m, dtype=lhs.dtype)
-    rhs = jax.lax.dot_general(                 # (m,) all-reduced
-        k_nm, y.astype(knm_dtype), (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
     beta = jnp.linalg.solve(lhs, rhs)          # replicated small solve
 
     # 4) in-sample predictions, sharded rows

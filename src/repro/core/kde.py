@@ -93,35 +93,76 @@ def _cic_stencil(frac: Array, weights: Array | None = None) -> Array:
 
 
 @functools.partial(jax.jit, static_argnames=("grid_size", "tile",
-                                             "accumulator", "finalize"))
+                                             "accumulator", "finalize",
+                                             "method"))
 def scatter_cic(points: Array, lo: Array, spacing: Array, grid_size: int,
                 *, weights: Array | None = None,
                 tile: int | None = None,
-                accumulator: str = "plain", finalize: bool = True):
+                accumulator: str = "plain", finalize: bool = True,
+                method: str = "window"):
     """Cloud-in-cell deposit of (weighted) points onto a (grid_size,)^d grid.
 
-    Each point's whole (2,)^d stencil lands in ONE windowed scatter-add
-    update (update_window_dims), so the serial scatter loop runs n times
-    instead of n 2^d — on CPU this is the difference between the deposit
-    dominating the KDE and disappearing into the FFT's shadow.  With `tile`
-    set, rows stream through the engine (`streaming.tile_reduce`: zero-pad
-    + zero weights on the ragged tail, O(tile 2^d) transient stencil) with
-    the scatter as the engine's `combine`.  ``accumulator="compensated"``
-    carries the grid as a two-float (hi, lo) pair — each tile's deposit is
-    materialized against a zero grid and folded in with an error-free
-    two-sum; ``finalize=False`` returns the accumulator state for the mesh
-    psum in `core.distributed.kde_binned_sharded_multi`.
+    ``method="window"`` (default): each point's whole (2,)^d stencil lands
+    in ONE windowed scatter-add update (update_window_dims), so the serial
+    scatter loop runs n times instead of n 2^d — on CPU this is the
+    difference between the deposit dominating the KDE and disappearing into
+    the FFT's shadow.  This is the historical path and stays bit-equal to
+    the pre-engine loops.
+
+    ``method="segment"``: the sort-by-cell + segment-reduce formulation
+    (the XLA twin of the Pallas `repro.kernels.kde_binned` kernel): flatten
+    every corner to its linear cell id, sort the corner stream, and
+    `segment_sum` into the flat grid — duplicate-cell collisions reduce in
+    vector registers instead of serializing the scatter.  Matches "window"
+    to reduction-order tolerance (rtol 1e-5 locked in
+    tests/test_kde_binned_kernel.py), not bitwise.
+
+    With `tile` set, rows stream through the engine
+    (`streaming.tile_reduce`: zero-pad + zero weights on the ragged tail,
+    O(tile 2^d) transient stencil) with the deposit as the engine's
+    `combine`.  ``accumulator="compensated"`` carries the grid as a
+    two-float (hi, lo) pair — each tile's deposit is materialized against a
+    zero grid and folded in with an error-free two-sum; ``finalize=False``
+    returns the accumulator state for the mesh psum in
+    `core.distributed.kde_binned_sharded_multi`.
     """
     n, d = points.shape
+    if method not in ("window", "segment"):
+        raise ValueError(f"unknown scatter method {method!r}; "
+                         "pick 'window' or 'segment'")
     dnums = jax.lax.ScatterDimensionNumbers(
         update_window_dims=tuple(range(1, d + 1)),
         inserted_window_dims=(),
         scatter_dims_to_operand_dims=tuple(range(d)))
 
-    def combine(grid, pw):
+    def combine_window(grid, pw):
         pts, w = pw
         base, frac = cic_prep(pts, lo, spacing, grid_size)
         return jax.lax.scatter_add(grid, base, _cic_stencil(frac, w), dnums)
+
+    def combine_segment(grid, pw):
+        pts, w = pw
+        base, frac = cic_prep(pts, lo, spacing, grid_size)
+        t = pts.shape[0]
+        # linear cell ids of ALL 2^d corners: (t, 2^d), row-major lattice
+        ids = jnp.zeros((t,), jnp.int32)
+        for k in range(d):
+            ids = ids * grid_size + base[:, k]
+        # stencil axis k (lattice dim k) is bit d-1-k of the flat corner
+        # index, and dim k's linear stride is grid_size^(d-1-k) — so the
+        # offset is c's bits read as base-grid_size digits
+        offs = jnp.array([sum(((c >> j) & 1) * grid_size ** j
+                              for j in range(d)) for c in range(2 ** d)],
+                         jnp.int32)
+        flat_ids = (ids[:, None] + offs[None, :]).reshape(-1)
+        vals = _cic_stencil(frac, w).reshape(-1)
+        order = jnp.argsort(flat_ids)
+        seg = jax.ops.segment_sum(vals[order], flat_ids[order],
+                                  num_segments=grid_size ** d,
+                                  indices_are_sorted=True)
+        return grid + seg.reshape(grid.shape).astype(grid.dtype)
+
+    combine = combine_window if method == "window" else combine_segment
 
     acc = streaming.get(accumulator)
     init = jnp.zeros((grid_size,) * d, dtype=points.dtype)

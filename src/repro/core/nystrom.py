@@ -235,8 +235,77 @@ def _scan_steps(n: int, tile: int, x: Array,
     return -(-n_loc // min(grain, n_loc))
 
 
+def _resolve_gram_tile(tile: int | None, x: Array, xm: Array,
+                       backend: str | None, accumulator: str) -> int | None:
+    """``tile=None`` -> the autotuned XLA engine tile (`repro.tuning` via
+    `dispatch.resolve_tile`); explicit tiles pass through untouched, and the
+    Pallas gram path keeps None (it tunes bm/bn inside dispatch instead).
+    Resolution is per-chip: under an active mesh each device streams only
+    n / row_shard_count rows, which is the stream the tile must fit."""
+    from repro.kernels import dispatch
+    if tile is not None or dispatch.resolve(backend) == "pallas":
+        return tile
+    n_loc = max(1, x.shape[0] // streaming.row_shard_count(x.shape))
+    return dispatch.resolve_tile("gram", n_loc, xm.shape[0], x.shape[1],
+                                 dtype=x.dtype, backend="xla",
+                                 accumulator=accumulator)
+
+
+def _resolve_predict_tile(tile: int | None, x_new: Array, xm: Array,
+                          backend: str | None) -> int:
+    """``tile=None`` -> the autotuned predict row tile (per-chip, like the
+    gram resolution above; the tile slabs `streaming.tile_map` on every
+    backend)."""
+    from repro.kernels import dispatch
+    if tile is not None:
+        return tile
+    n_loc = max(1, x_new.shape[0] // streaming.row_shard_count(x_new.shape))
+    return dispatch.resolve_tile("predict", n_loc, xm.shape[0],
+                                 x_new.shape[1], dtype=x_new.dtype,
+                                 backend=backend)
+
+
+def _gram_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array, *,
+                    tile: int | None, autotuned: bool, backend: str | None,
+                    interpret: bool | None, accumulator: str
+                    ) -> tuple[Array, Array]:
+    """The (G, rhs) accumulation behind `fit_streaming[_multi]`.
+
+    When the tile came from the autotuner (`autotuned=True`, i.e. the caller
+    passed ``tile=None``) and the call is a plain single-device XLA stream
+    made outside any trace, the accumulation runs through a plan-keyed
+    compiled executable (`tuning.cached_executable`) — repeated fits at one
+    shape skip re-tracing the scan, which costs as much as the tile choice
+    saves.  The jitted scan lowers to the same HLO as the eager one, so the
+    result stays bit-equal to the explicit-tile call (locked in
+    tests/test_autotune.py); explicit tiles always take the eager path.
+    """
+    from repro.kernels import dispatch
+
+    if (autotuned and tile is not None
+            and dispatch.resolve(backend) == "xla"
+            and streaming.row_shard_count(x.shape) == 1
+            and jax.core.trace_state_clean()):
+        from repro import tuning
+        key = ("gram_normal_eq", kernel, x.shape, y.shape, xm.shape,
+               str(x.dtype), str(y.dtype), tile, accumulator)
+        try:
+            hash(key)
+        except TypeError:   # kernel with array-valued params: stay eager
+            pass
+        else:
+            fn = tuning.cached_executable(
+                key,
+                lambda: lambda x_, y_, xm_: streaming_normal_eq(
+                    kernel, x_, y_, xm_, tile=tile, backend=backend,
+                    interpret=interpret, accumulator=accumulator))
+            return fn(x, y, xm)
+    return streaming_normal_eq(kernel, x, y, xm, tile=tile, backend=backend,
+                               interpret=interpret, accumulator=accumulator)
+
+
 def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
-                   *, tile: int = 8192, accumulator: str = "plain",
+                   *, tile: int | None = None, accumulator: str = "plain",
                    finalize: bool = True) -> tuple[Array, Array]:
     """(K_nm^T K_nm, K_nm^T w) accumulated over `tile`-row slabs.
 
@@ -247,8 +316,11 @@ def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
     "compensated" carries a two-float error sum across tiles).  This is the
     XLA backend of `repro.kernels.dispatch.gram_accumulate`; the Pallas
     `gram` kernel computes the same quantity tile-fused on TPU.
-    `finalize=False` returns the raw accumulator state for a mesh psum.
+    ``tile=None`` autotunes the slab size (`repro.tuning` — same numbers
+    as passing the resolved integer explicitly).  `finalize=False` returns
+    the raw accumulator state for a mesh psum.
     """
+    tile = _resolve_gram_tile(tile, x, xm, "xla", accumulator)
     m = xm.shape[0]
     acc = jnp.promote_types(x.dtype, jnp.float32)  # f64 under enable_x64
 
@@ -266,7 +338,8 @@ def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
 
 
 def streaming_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array,
-                        *, tile: int = 8192, backend: str | None = None,
+                        *, tile: int | None = None,
+                        backend: str | None = None,
                         interpret: bool | None = None,
                         accumulator: str = "plain",
                         finalize: bool = True) -> tuple[Array, Array]:
@@ -277,9 +350,13 @@ def streaming_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array,
     slab and the accumulator state is psum-reduced (`streaming.mesh_reduce`
     — the compensated (hi, lo) pair crosses the collective un-collapsed).
     Otherwise (no mesh, or indivisible n) this is exactly the single-device
-    accumulation.
+    accumulation.  ``tile=None`` autotunes — resolved HERE, eagerly, so
+    any tuning micro-benchmark runs outside the shard_map trace and every
+    chip executes the same plan.
     """
     from repro.kernels import dispatch
+
+    tile = _resolve_gram_tile(tile, x, xm, backend, accumulator)
 
     def local(x_loc, w_loc, xm_rep):
         return dispatch.gram_accumulate(kernel, x_loc, xm_rep, w_loc,
@@ -299,7 +376,7 @@ def fit_streaming(
     lam: float,
     landmark_idx: Array,
     *,
-    tile: int = 8192,
+    tile: int | None = None,
     backend: str | None = None,
     interpret: bool | None = None,
     jitter: float = 1e-6,
@@ -321,9 +398,11 @@ def fit_streaming(
     _require_sentinel_safe(kernel)
     n = x.shape[0]
     xm = jnp.take(x, landmark_idx, axis=0)
-    g, rhs = streaming_normal_eq(kernel, x, y, xm, tile=tile,
-                                 backend=backend, interpret=interpret,
-                                 accumulator=accumulator)
+    autotuned = tile is None
+    tile = _resolve_gram_tile(tile, x, xm, backend, accumulator)
+    g, rhs = _gram_normal_eq(kernel, x, y, xm, tile=tile,
+                             autotuned=autotuned, backend=backend,
+                             interpret=interpret, accumulator=accumulator)
     # k_mm is O(m^2) work — the core path keeps it in the input dtype, which
     # the dense solve also uses (dtype parity matters more than MXU here).
     k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
@@ -345,7 +424,7 @@ def fit_streaming_multi(
     lams: Sequence[float],
     landmark_idx: Array,
     *,
-    tile: int = 8192,
+    tile: int | None = None,
     backend: str | None = None,
     interpret: bool | None = None,
     jitter: float = 1e-6,
@@ -366,9 +445,11 @@ def fit_streaming_multi(
     _require_sentinel_safe(kernel)
     n = x.shape[0]
     xm = jnp.take(x, landmark_idx, axis=0)
-    g, rhs = streaming_normal_eq(kernel, x, y, xm, tile=tile,
-                                 backend=backend, interpret=interpret,
-                                 accumulator=accumulator)
+    autotuned = tile is None
+    tile = _resolve_gram_tile(tile, x, xm, backend, accumulator)
+    g, rhs = _gram_normal_eq(kernel, x, y, xm, tile=tile,
+                             autotuned=autotuned, backend=backend,
+                             interpret=interpret, accumulator=accumulator)
     k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
     if weights is not None:
         g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
@@ -383,7 +464,7 @@ def fit_streaming_multi(
 
 
 def predict_streaming_multi(kernel: Kernel, fits: Sequence[NystromFit],
-                            x_new: Array, *, tile: int = 8192,
+                            x_new: Array, *, tile: int | None = None,
                             backend: str | None = None) -> Array:
     """Batched predict for several fits SHARING one landmark set: (L, n_new).
 
@@ -398,6 +479,7 @@ def predict_streaming_multi(kernel: Kernel, fits: Sequence[NystromFit],
     _require_sentinel_safe(kernel)
     betas = jnp.stack([f.beta for f in fits], axis=1)     # (m, L)
     xm = fits[0].landmarks
+    tile = _resolve_predict_tile(tile, x_new, xm, backend)
 
     def local(x_loc, xm, betas):
         def one(xt):
@@ -410,9 +492,13 @@ def predict_streaming_multi(kernel: Kernel, fits: Sequence[NystromFit],
 
 
 def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
-                      *, tile: int = 8192,
+                      *, tile: int | None = None,
                       backend: str | None = None) -> Array:
     """Batched predict: O(tile * m) memory, any n_new.
+
+    ``tile=None`` autotunes the slab size (`repro.tuning` via
+    `dispatch.resolve_tile`) — pure shape plumbing, identical numbers to
+    passing the resolved tile explicitly.
 
     Mesh-aware like the solve: under an active `repro.distributed.sharding`
     mesh whose "rows" rule maps to a mesh axis that divides n_new, each
@@ -424,6 +510,7 @@ def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
     from repro.kernels import dispatch
 
     _require_sentinel_safe(kernel)
+    tile = _resolve_predict_tile(tile, x_new, fit_.landmarks, backend)
 
     def local(x_loc, xm, beta):
         def one(xt):

@@ -52,18 +52,47 @@ def kernel_matrix(kernel: core_kernels.Kernel, x: Array,
     return core_kernels.kernel_matrix(kernel, x, y)
 
 
+def resolve_plan(op: str, n: int, m: int, d: int, *,
+                 dtype=None, backend: str | None = None,
+                 accumulator: str = "plain"):
+    """Autotuned execution plan for a streamed op (`repro.tuning`).
+
+    This is THE boundary where ``tile=None`` (and Pallas bm/bn defaults)
+    become concrete integers: the roofline-ranked, optionally
+    micro-benchmarked, cache-persisted choice for (device, backend, op,
+    shape bucket).  Pure shape plumbing — the plan never perturbs
+    numerics, so op(tile=None) is bit-equal to op(tile=plan.tile).
+    """
+    import jax.numpy as jnp
+
+    from repro import tuning
+    return tuning.plan_for(op, int(n), int(m), int(d),
+                           dtype=dtype if dtype is not None else jnp.float32,
+                           backend=resolve(backend), accumulator=accumulator)
+
+
+def resolve_tile(op: str, n: int, m: int, d: int, *,
+                 dtype=None, backend: str | None = None,
+                 accumulator: str = "plain") -> int:
+    """`resolve_plan(...).tile` — the engine-tile shorthand the streaming
+    entry points (`repro.core.nystrom`) use for their ``tile=None``."""
+    return resolve_plan(op, n, m, d, dtype=dtype, backend=backend,
+                        accumulator=accumulator).tile
+
+
 def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
                     w: Array, *, backend: str | None = None,
-                    tile: int = 8192, interpret: bool | None = None,
+                    tile: int | None = None, interpret: bool | None = None,
                     accumulator: str = "plain", finalize: bool = True,
                     **kw) -> tuple:
     """(K_nm^T K_nm, K_nm^T w) through the resolved backend.
 
-    The Pallas path is the fused one-pass `gram` kernel (row block <= 256,
-    set by the MXU tiling); the XLA path is the engine-tiled row-slab
-    accumulation in `repro.core.nystrom` (`streaming.tile_reduce`) with
-    `tile` rows per step.  Neither ever materializes the (n, m)
-    cross-kernel matrix.
+    The Pallas path is the fused one-pass `gram` kernel (row/column blocks
+    ``bm``/``bn``, autotuned through `resolve_plan` unless passed
+    explicitly); the XLA path is the engine-tiled row-slab accumulation in
+    `repro.core.nystrom` (`streaming.tile_reduce`) with `tile` rows per
+    step — ``tile=None`` means autotune.  Neither ever materializes the
+    (n, m) cross-kernel matrix.
 
     Both backends implement the same ``accumulator`` strategies
     (`repro.core.streaming`): "plain" (historical fp32 running sum) and
@@ -73,46 +102,70 @@ def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
     """
     if resolve(backend) == "pallas":
         from repro.kernels.gram import ops as gram_ops
+        if "bm" not in kw or "bn" not in kw:
+            plan = resolve_plan("gram", x.shape[0], y.shape[0], x.shape[1],
+                                dtype=x.dtype, backend="pallas",
+                                accumulator=accumulator)
+            kw.setdefault("bm", plan.bm)
+            kw.setdefault("bn", plan.bn)
         return gram_ops.gram_matrix(kernel, x, y, w, interpret=interpret,
                                     accumulator=accumulator,
                                     finalize=finalize, **kw)
     from repro.core import nystrom
+    if tile is None:
+        tile = resolve_tile("gram", x.shape[0], y.shape[0], x.shape[1],
+                            dtype=x.dtype, backend="xla",
+                            accumulator=accumulator)
     return nystrom.scan_normal_eq(kernel, x, y, w, tile=tile,
                                   accumulator=accumulator, finalize=finalize)
 
 
 def binned_scatter(data: Array, lo: Array, spacing: Array, grid_size: int,
                    *, backend: str | None = None, weights: Array | None = None,
-                   tile: int | None = None,
+                   tile: int | None = None, bm: int | None = None,
                    interpret: bool | None = None,
                    accumulator: str = "plain", finalize: bool = True):
     """Cloud-in-cell deposit onto a (grid_size,)^d grid, resolved backend.
 
     The deposit stage of the binned KDE (`repro.core.kde.kde_binned`).  The
     Pallas path (`repro.kernels.kde_binned`) keeps the grid VMEM-resident
-    and streams row tiles through it; the XLA path is the windowed
-    scatter-add in `repro.core.kde.scatter_cic` (one update per point,
-    engine-tiled `tile`-row slabs via `streaming.tile_reduce`).  Both match
-    the corner-loop oracle `repro.kernels.kde_binned.ref.binned_grid` to
-    reduction-order tolerance.
+    and streams sorted corner chunks through a segment-reduce (``bm``
+    points per chunk, autotuned via `resolve_plan` when None); the XLA
+    path is the windowed scatter-add in `repro.core.kde.scatter_cic`
+    (engine-tiled `tile`-row slabs via `streaming.tile_reduce`;
+    ``tile=None`` means autotune).  Both match the corner-loop oracle
+    `repro.kernels.kde_binned.ref.binned_grid` to reduction-order
+    tolerance.
 
     ``accumulator="compensated"`` carries the grid as a two-float (hi, lo)
-    pair across tiles; it is served by the XLA engine path — the Pallas
-    deposit kernel is plain-only (its serial per-point fori_loop has no
-    tile-delta to compensate), so compensated requests route to XLA.
-    ``finalize=False`` returns the accumulator state for a mesh psum
-    (`core.distributed.kde_binned_sharded_multi`).
+    pair across tiles on BOTH backends — the segment-reduce kernel banks
+    each sorted segment's two-sum error in a VMEM lo grid, so compensated
+    deposits stay on Pallas (the historical serial kernel had no tile
+    delta to compensate and forced an XLA reroute).  ``finalize=False``
+    returns the accumulator state — structurally identical across backends
+    — for a mesh psum (`core.distributed.kde_binned_sharded_multi`).
 
     The deposit is bandwidth-independent (only the grid geometry enters),
     which is why `kde.kde_binned_multi` / the CalibrateStage bandwidth sweep
     call this ONCE per grid and amortize it across every h candidate — keep
     that contract if you add state to either backend.
     """
-    if resolve(backend) == "pallas" and accumulator == "plain":
+    if resolve(backend) == "pallas":
         from repro.kernels.kde_binned import ops as kb_ops
+        if bm is None:
+            bm = resolve_plan("deposit", data.shape[0], grid_size,
+                              data.shape[1], dtype=data.dtype,
+                              backend="pallas", accumulator=accumulator).bm
         return kb_ops.binned_scatter(data, lo, spacing, grid_size,
-                                     weights=weights, interpret=interpret)
+                                     weights=weights, bm=bm,
+                                     interpret=interpret,
+                                     accumulator=accumulator,
+                                     finalize=finalize)
     from repro.core import kde as core_kde
+    if tile is None:
+        tile = resolve_tile("deposit", data.shape[0], grid_size,
+                            data.shape[1], dtype=data.dtype, backend="xla",
+                            accumulator=accumulator)
     return core_kde.scatter_cic(data, lo, spacing, grid_size,
                                 weights=weights, tile=tile,
                                 accumulator=accumulator, finalize=finalize)

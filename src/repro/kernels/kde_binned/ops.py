@@ -2,19 +2,26 @@
 
 Precomputes the vectorizable parts of the cloud-in-cell deposit — all O(n)
 arrays, keeping the streaming-memory contract (the Pallas body builds each
-point's 2-nonzero lane row itself and is otherwise a pure scatter, see
-kernel.py):
+corner's 2-nonzero lane row itself and is otherwise a pure segment-reduce,
+see kernel.py):
 
-  * `rows`  — per point, the 2^(d-1) flattened sublane row indices of the
-    stencil corners over the leading d-1 lattice axes;
-  * `cw`    — the matching product-of-(1-f, f) corner weights, scaled by
-    the optional point weight (zeroed on padded rows, so no masking is
+  * `rows`  — per corner (2^(d-1) per point), the flattened sublane row
+    index of the stencil corner over the leading d-1 lattice axes;
+  * `cw`    — the matching product-of-(1-f, f) corner weight, scaled by
+    the optional point weight (zeroed on padded corners, so no masking is
     needed in the kernel);
   * `blast` / `flast` — the last-axis base lane + fraction the body's iota
-    compare expands into the lane deposit row.
+    compare expands into the lane deposit row;
+  * per kc-corner chunk (kc = bm * 2^(d-1), one kernel grid step), the
+    corner stream is SORTED by `rows` and `segend` marks the last corner
+    of every equal-row run — the kernel then performs one VMEM
+    read-modify-write per distinct row instead of one per corner, which
+    both vectorizes duplicate-cell collisions and exposes each segment as
+    an additive delta the compensated (hi, lo) accumulator can two-sum.
 
-Rows are padded to bm multiples; lane padding (g -> 128-multiples on TPU)
-is sliced off before the (g,)^d reshape.
+Rows are padded to bm multiples (zero weight, row 0 — the pads sort into
+the first segment and deposit nothing); lane padding (g -> 128-multiples
+on TPU) is sliced off before the (g,)^d reshape.
 """
 
 from __future__ import annotations
@@ -32,7 +39,8 @@ Array = jax.Array
 
 
 @functools.partial(
-    jax.jit, static_argnames=("grid_size", "bm", "interpret", "use_pallas")
+    jax.jit, static_argnames=("grid_size", "bm", "interpret", "use_pallas",
+                              "accumulator", "finalize")
 )
 def binned_scatter(
     data: Array,
@@ -44,18 +52,30 @@ def binned_scatter(
     bm: int = 256,
     interpret: bool | None = None,
     use_pallas: bool = True,
-) -> Array:
+    accumulator: str = "plain",
+    finalize: bool = True,
+):
     """(n, d) points -> (grid_size,)^d CIC mass grid (Pallas path).
 
     Matches `ref.binned_grid` / `repro.core.kde.scatter_cic` to fp32
     reduction-order tolerance.  use_pallas=False falls back to the corner-
     loop oracle; interpret=None resolves to True off-TPU.
+
+    ``accumulator="compensated"`` runs the kernel's two-float (hi, lo)
+    grid (kernel.py) — the same strategy `repro.core.streaming` uses, so
+    with ``finalize=False`` the returned (hi, lo) state matches the XLA
+    engine's and can cross a mesh psum un-collapsed
+    (`core.distributed.kde_binned_sharded_multi`).
     """
     n, d = data.shape
     if not 1 <= d <= 3:
         raise ValueError(f"binned_scatter supports 1 <= d <= 3, got d={d}")
+    compensated = accumulator == "compensated"
     if not use_pallas:
-        return ref.binned_grid(data, lo, spacing, grid_size, weights=weights)
+        grid = ref.binned_grid(data, lo, spacing, grid_size, weights=weights)
+        if compensated and not finalize:
+            return (grid, jnp.zeros_like(grid))
+        return grid
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     g = grid_size
@@ -84,9 +104,39 @@ def binned_scatter(
     bm_ = min(bm, round_up(n, 8))
     np_ = round_up(n, bm_)
     pad = ((0, np_ - n), (0, 0))
-    grid2d = kk.scatter_padded(
-        jnp.pad(rows, pad), jnp.pad(cw, pad), jnp.pad(blast, pad),
-        jnp.pad(flast, pad),
-        rows_dim=g ** (d - 1), lanes_dim=cp, bm=bm_, interpret=interpret,
+    kc = bm_ * n_sub
+
+    # Flatten (point, corner) into the corner stream, then sort each
+    # kc-corner chunk by sublane row and flag segment ends — the kernel's
+    # one-RMW-per-distinct-row contract.  Pads (zero weight) carry row 0
+    # and sort into the first segment harmlessly.
+    def chunks(a):
+        return jnp.pad(a, pad).reshape(-1, kc)
+
+    rows_c = chunks(rows)
+    order = jnp.argsort(rows_c, axis=1)
+    take = functools.partial(jnp.take_along_axis, indices=order, axis=1)
+    rows_s = take(rows_c)
+    cw_s = take(chunks(cw))
+    blast_s = take(chunks(jnp.broadcast_to(blast, (n, n_sub))))
+    flast_s = take(chunks(jnp.broadcast_to(flast, (n, n_sub))))
+    segend = jnp.concatenate(
+        [rows_s[:, 1:] != rows_s[:, :-1],
+         jnp.ones((rows_s.shape[0], 1), bool)], axis=1).astype(jnp.int32)
+
+    flat = lambda a: a.reshape(-1, 1)  # noqa: E731
+    out = kk.scatter_sorted(
+        flat(rows_s), flat(cw_s), flat(blast_s), flat(flast_s), flat(segend),
+        rows_dim=g ** (d - 1), lanes_dim=cp, kc=kc,
+        compensated=compensated, interpret=interpret,
     )
-    return grid2d[:, :g].reshape((g,) * d).astype(data.dtype)
+
+    def crop(grid2d):
+        return grid2d[:, :g].reshape((g,) * d).astype(data.dtype)
+
+    if compensated:
+        hi, lo_bank = out
+        if finalize:
+            return crop(hi + lo_bank)   # fold in f32, then cast once
+        return (crop(hi), crop(lo_bank))
+    return crop(out)

@@ -92,8 +92,15 @@ class PipelineConfig:
     # sampling
     sample_with_replacement: bool = False  # paper Thm 2 iid mode when True
     # execution
-    tile: int = 8192                  # rows per streaming slab
+    # rows per streaming slab; None autotunes per (device, op, shape bucket)
+    # through repro.tuning (roofline-ranked, cache-persisted — see
+    # pipeline/README.md "Autotuning & tile selection")
+    tile: int | None = None
     backend: str = "auto"             # auto | xla | pallas (dispatch.resolve)
+    # autotune=True additionally MEASURES the top roofline candidates with a
+    # one-off cached micro-benchmark during fit/evaluate/calibrate (same
+    # numerics either way — tuning only picks tile sizes)
+    autotune: bool = False
     # streaming-accumulation strategy (repro.core.streaming): "plain" is the
     # historical fp32 running sum, "compensated" the two-float (Kahan)
     # error-carrying sum — lower Gram noise floor, ~2 extra adds per tile
@@ -185,9 +192,21 @@ class SAKRRPipeline:
             bandwidth=ctx.bandwidth, cv_scores=ctx.cv_scores,
             cv_best=ctx.cv_best)
 
+    def _run(self, stage_list: Sequence[stages_mod.Stage],
+             ctx: stages_mod.StageContext) -> None:
+        """`run_stages` under the config's tuning mode: `autotune=True`
+        enables measured plan selection (`repro.tuning.measured`) for every
+        tile the fold resolves — cached, so only the first cold fold pays."""
+        if getattr(self.config, "autotune", False):
+            from repro import tuning
+            with tuning.measured():
+                stages_mod.run_stages(stage_list, ctx)
+        else:
+            stages_mod.run_stages(stage_list, ctx)
+
     def fit(self, x: Array, y: Array) -> "SAKRRPipeline":
         ctx = self._make_context(x, y)
-        stages_mod.run_stages(self.stages, ctx)
+        self._run(self.stages, ctx)
         self._snapshot(ctx)
         return self
 
@@ -209,7 +228,7 @@ class SAKRRPipeline:
         """
         ctx = self._make_context(x, y, x_eval=x_eval, y_eval=y_eval,
                                  f_star=f_star)
-        stages_mod.run_stages(self._completed_eval_stages(), ctx)
+        self._run(self._completed_eval_stages(), ctx)
         self._snapshot(ctx)
         return dict(ctx.scores or {})
 
@@ -261,7 +280,7 @@ class SAKRRPipeline:
                 backend=self._predict_backend(), tile=self._predict_tile(),
                 weighted=solve.weighted if solve is not None else False,
                 accumulator=solve.accumulator if solve is not None else None))
-        stages_mod.run_stages(cal_stages, ctx)
+        self._run(cal_stages, ctx)
         self._snapshot(ctx)
         return dict(ctx.cv_best or {}, cv_scores=ctx.cv_scores,
                     scores=dict(ctx.scores or {}))
@@ -279,7 +298,8 @@ class SAKRRPipeline:
                 solve.backend is not None
                 else stages_mod.resolve_backend(self.config))
 
-    def _predict_tile(self, tile: int | None = None) -> int:
+    def _predict_tile(self, tile: int | None = None) -> int | None:
+        """None falls through to autotune inside `nystrom.predict_streaming`."""
         if tile is not None:
             return tile
         solve = self._solve_stage()
@@ -298,7 +318,7 @@ class SAKRRPipeline:
         stage = stages_mod.PredictStage(
             x_eval=x_new, backend=self._predict_backend(),
             tile=self._predict_tile(tile))
-        stages_mod.run_stages([stage], ctx)
+        self._run([stage], ctx)
         self._snapshot(ctx)
         return ctx.predictions
 

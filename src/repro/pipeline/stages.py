@@ -148,9 +148,8 @@ class DensityStage(Stage):
         method = _resolve_kde_method(self.method or cfg.kde_method, ctx.d)
         grid_size = (self.grid_size or cfg.kde_grid_size
                      or kde.default_grid_size(ctx.d))
-        backend = self.backend if self.backend is not None else _backend(cfg)
-        tile = self.tile if self.tile is not None else cfg.kde_tile
-        accumulator = self.accumulator or _accumulator(cfg)
+        backend, tile, accumulator = resolve_exec(self, cfg,
+                                                  tile_attr="kde_tile")
         # bandwidth resolution: stage override > calibrated ctx.bandwidth >
         # config > Scott's rule (the pre-calibration default)
         h = self.h if self.h is not None else ctx.bandwidth
@@ -278,12 +277,11 @@ class SolveStage(Stage):
     def run(self, ctx: StageContext) -> None:
         cfg = ctx.config
         weights = ctx.sample_weights if self.weighted else None
+        backend, tile, accumulator = resolve_exec(self, cfg)
         ctx.fit = nystrom.fit_streaming(
             ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
-            tile=self.tile if self.tile is not None else cfg.tile,
-            backend=self.backend if self.backend is not None else _backend(cfg),
-            jitter=cfg.jitter, weights=weights,
-            accumulator=self.accumulator or _accumulator(cfg))
+            tile=tile, backend=backend, jitter=cfg.jitter, weights=weights,
+            accumulator=accumulator)
 
 
 class PredictStage(Stage):
@@ -308,11 +306,9 @@ class PredictStage(Stage):
             ctx.x_eval = jnp.asarray(self.x_eval)
         if ctx.x_eval is None:
             ctx.x_eval = ctx.x                       # the paper's R_n setting
+        backend, tile, _ = resolve_exec(self, cfg)
         ctx.predictions = nystrom.predict_streaming(
-            ctx.kernel, ctx.fit, ctx.x_eval,
-            tile=self.tile if self.tile is not None else cfg.tile,
-            backend=self.backend if self.backend is not None
-            else _backend(cfg))
+            ctx.kernel, ctx.fit, ctx.x_eval, tile=tile, backend=backend)
 
 
 class ScoreStage(Stage):
@@ -467,9 +463,9 @@ class CalibrateStage(Stage):
         if method != "binned":
             return jnp.stack([kde.kde_direct(x_tr, x_tr, h) for h in h_grid])
         grid_size = cfg.kde_grid_size or kde.default_grid_size(ctx.d)
-        backend = self.backend if self.backend is not None else _backend(cfg)
-        tile = cfg.kde_tile
-        accumulator = self.accumulator or _accumulator(cfg)
+        backend, tile, accumulator = resolve_exec(self, cfg,
+                                                  tile_attr="kde_tile",
+                                                  stage_tile=False)
         h_max = jnp.asarray(max(h_grid), x_tr.dtype)
         lo, hi = kde.binned_bounds(x_tr, x_tr, h_max)
         if shd.active() is not None:
@@ -489,9 +485,7 @@ class CalibrateStage(Stage):
         x_tr, y_tr = ctx.x[tr_idx], ctx.y[tr_idx]
         x_val, y_val = ctx.x[val_idx], ctx.y[val_idx]
         n_tr = int(x_tr.shape[0])
-        tile = self.tile if self.tile is not None else cfg.tile
-        backend = self.backend if self.backend is not None else _backend(cfg)
-        accumulator = self.accumulator or _accumulator(cfg)
+        backend, tile, accumulator = resolve_exec(self, cfg)
 
         t0 = time.perf_counter()
         dens = self._densities_multi(ctx, x_tr, h_grid)
@@ -596,5 +590,25 @@ def resolve_accumulator(cfg: Any) -> str:
     return getattr(cfg, "accumulator", None) or "plain"
 
 
-_backend = resolve_backend       # module-internal shorthand
-_accumulator = resolve_accumulator
+def resolve_exec(stage: Any, cfg: Any, *, tile_attr: str = "tile",
+                 stage_tile: bool = True) -> tuple[str | None, int | None, str]:
+    """Per-stage execution knobs: (backend, tile, accumulator).
+
+    One resolver for every stage's precedence chain — stage constructor
+    override beats the pipeline-wide config default.  ``tile_attr`` names
+    the config field the stage's tile falls back to ("tile" for the
+    solve/predict row slabs, "kde_tile" for the deposit);
+    ``stage_tile=False`` ignores the stage's own tile attribute
+    (CalibrateStage's shared deposit reads the config's kde_tile, not the
+    stage's Gram tile).  A resolved tile of None means autotune
+    (`repro.tuning` through `kernels.dispatch.resolve_plan`).
+    """
+    backend = getattr(stage, "backend", None)
+    if backend is None:
+        backend = resolve_backend(cfg)
+    tile = getattr(stage, "tile", None) if stage_tile else None
+    if tile is None:
+        tile = getattr(cfg, tile_attr, None)
+    accumulator = (getattr(stage, "accumulator", None)
+                   or resolve_accumulator(cfg))
+    return backend, tile, accumulator

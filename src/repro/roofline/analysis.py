@@ -27,6 +27,56 @@ PEAK_FLOPS = 197e12         # bf16 FLOP/s per chip
 HBM_BW = 819e9              # bytes/s per chip
 LINK_BW = 50e9              # bytes/s per ICI link
 
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """Per-device roofline constants the tile autotuner's analytic model
+    feeds on (`repro.tuning.autotune`).
+
+    These are deliberately coarse — the model only has to RANK a small
+    pow2 tile ladder well enough that the measured top-k contains the true
+    optimum; the micro-benchmark settles the final choice.  `step_overhead`
+    is the fixed per-scan-step cost (dispatch + loop control + slab
+    pad/reshape traffic) that punishes tiny tiles; `cache_bytes` is the
+    working-set size past which a slab stops fitting the fast level of the
+    memory hierarchy (VMEM on TPU, last-level cache per core complex on
+    CPU) and the effective compute rate degrades.
+    """
+
+    name: str
+    peak_flops: float       # sustained f32 FLOP/s
+    mem_bw: float           # bytes/s to main memory
+    step_overhead: float    # seconds of fixed cost per streamed tile
+    cache_bytes: float      # fast-memory working-set budget
+
+
+DEVICE_SPECS = {
+    # v5e: f32 MXU rate is half the bf16 peak; VMEM ~128 MB but a slab
+    # should leave room for double buffering.
+    "tpu": DeviceSpec("tpu", PEAK_FLOPS / 2, HBM_BW, 5e-6, 64e6),
+    "gpu": DeviceSpec("gpu", 3e13, 1.0e12, 1e-5, 4e7),
+    # CPU under XLA: a few AVX cores of GEMM, L2/L3-bounded slabs.
+    "cpu": DeviceSpec("cpu", 1e11, 3e10, 1e-4, 8e6),
+}
+
+
+def device_spec(device_kind: str | None = None) -> DeviceSpec:
+    """Map a jax device kind string onto the coarse spec table.
+
+    `device_kind` defaults to the first local device; unknown kinds fall
+    back to the CPU spec (the conservative model: small tiles, cheap
+    memory assumptions never starve the measured ladder).
+    """
+    if device_kind is None:
+        import jax
+        device_kind = jax.devices()[0].device_kind
+    kind = device_kind.lower()
+    if "tpu" in kind:
+        return DEVICE_SPECS["tpu"]
+    if "gpu" in kind or "nvidia" in kind or "cuda" in kind:
+        return DEVICE_SPECS["gpu"]
+    return DEVICE_SPECS["cpu"]
+
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 

@@ -1,0 +1,217 @@
+"""Roofline-guided tile autotuner (`repro.tuning`): deterministic plans,
+shape-bucketed cache keys, measured-plan caching, and the bit-parity
+contract — resolving ``tile=None`` never perturbs numerics, it only picks
+the integer the op would have been called with."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tuning
+from repro.core import kde, kernels, nystrom
+from repro.kernels import dispatch
+
+
+@pytest.fixture()
+def tune_cache(tmp_path, monkeypatch):
+    """Isolated plan cache: every test starts cold and touches only tmp."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+    tuning.set_measure(None)
+    tuning.clear_cache()
+    yield path
+    tuning.clear_cache()
+    tuning.set_measure(None)
+
+
+# ------------------------------------------------------------------- plans --
+def test_model_plan_deterministic(tune_cache):
+    a = tuning.plan_for("gram", 262144, 320, 3)
+    tuning.clear_cache()
+    b = tuning.plan_for("gram", 262144, 320, 3)
+    assert a.tile == b.tile
+    assert a.source == "model" and b.source == "model"
+    assert a.tuning_seconds == 0.0
+
+
+def test_shape_bucket_stability(tune_cache):
+    """Nearby shapes share one pow2 bucket, hence one cache entry."""
+    k1 = tuning.shape_key("gram", 5000, 300, 3)
+    k2 = tuning.shape_key("gram", 6000, 290, 3)
+    assert k1 == k2
+    k3 = tuning.shape_key("gram", 9000, 300, 3)   # next n bucket
+    assert k3 != k1
+    p1 = tuning.plan_for("gram", 5000, 300, 3)
+    p2 = tuning.plan_for("gram", 6000, 290, 3)
+    assert p1.source == "model" and p2.source == "cache"
+    assert p1.tile == p2.tile
+
+
+def test_cache_hit_and_disk_roundtrip(tune_cache):
+    cold = tuning.plan_for("predict", 50000, 160, 3)
+    assert cold.source == "model"
+    warm = tuning.plan_for("predict", 50000, 160, 3)
+    assert warm.source == "cache" and warm.tile == cold.tile
+    # the entry survives on disk and a cold in-memory cache recalls it
+    payload = json.loads(tune_cache.read_text())
+    assert payload["version"] == 1 and len(payload["entries"]) == 1
+    from repro.tuning import autotune
+    autotune._MEMORY.clear()
+    autotune._DISK_LOADED = False
+    again = tuning.plan_for("predict", 50000, 160, 3)
+    assert again.source == "cache" and again.tile == cold.tile
+
+
+def test_ladder_bounds_and_one_shot_top_rung(tune_cache):
+    for op in tuning.OPS:
+        ladder = tuning.candidate_tiles(op, 40000, 320, 3)
+        assert ladder, op
+        for t in ladder:
+            assert t & (t - 1) == 0, (op, t)          # pow2 rungs only
+            assert tuning.MIN_TILE <= t <= tuning.MAX_TILE
+        # the one-shot rung (pow2-ceil of n) is always a candidate when it
+        # fits the ladder ceiling — small-n calls degenerate to untiled
+        assert 65536 in ladder, op
+    small = tuning.candidate_tiles("deposit", 600, 96, 3)
+    assert max(small) >= 600
+
+
+def test_unknown_op_and_degenerate_shapes(tune_cache):
+    with pytest.raises(ValueError):
+        tuning.plan_for("nope", 1000, 10, 3)
+    p = tuning.plan_for("gram", 0, 10, 3)
+    assert p.source == "default" and p.tile == tuning.DEFAULT_TILE
+
+
+# ---------------------------------------------------------------- measured --
+@pytest.mark.slow
+def test_measured_plan_then_warm_cache(tune_cache):
+    n, m, d = 4096, 32, 3
+    t0 = time.perf_counter()
+    cold = tuning.plan_for("gram", n, m, d, measure=True)
+    cold_s = time.perf_counter() - t0
+    assert cold.source == "measured"
+    assert cold.tuning_seconds > 0.0
+    assert cold.tuning_seconds <= cold_s
+    t0 = time.perf_counter()
+    warm = tuning.plan_for("gram", n, m, d, measure=True)
+    warm_s = time.perf_counter() - t0
+    assert warm.source == "cache" and warm.tile == cold.tile
+    assert warm_s < 0.1, warm_s     # warm runs never re-measure
+    entry = json.loads(tune_cache.read_text())["entries"]
+    assert list(entry.values())[0]["source"] == "measured"
+
+
+def test_measured_context_gates_measurement(tune_cache):
+    assert not tuning.measuring()
+    with tuning.measured():
+        assert tuning.measuring()
+        with tuning.measured(False):
+            assert not tuning.measuring()
+        assert tuning.measuring()
+    assert not tuning.measuring()
+
+
+def test_no_measurement_under_trace(tune_cache):
+    """plan resolution inside a jit trace must fall back to the model (a
+    micro-benchmark cannot run mid-trace)."""
+    seen = {}
+
+    @jax.jit
+    def f(x):
+        seen["plan"] = tuning.plan_for("gram", 8192, 64, 3, measure=True)
+        return x
+
+    f(jnp.ones(3))
+    assert seen["plan"].source == "model"
+
+
+# -------------------------------------------------------------- bit parity --
+def _data(n=2000, d=3, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (n, d), jnp.float32),
+            jax.random.normal(ky, (n,), jnp.float32))
+
+
+def test_gram_autotuned_bit_equal(tune_cache):
+    x, y = _data()
+    kern = kernels.Matern(1.5)
+    xm = x[:48]
+    tile = dispatch.resolve_tile("gram", x.shape[0], 48, 3, dtype=x.dtype)
+    g0, r0 = nystrom.scan_normal_eq(kern, x, xm, y, tile=None)
+    g1, r1 = nystrom.scan_normal_eq(kern, x, xm, y, tile=tile)
+    assert np.array_equal(np.asarray(g0), np.asarray(g1))
+    assert np.array_equal(np.asarray(r0), np.asarray(r1))
+
+
+def test_deposit_autotuned_bit_equal(tune_cache):
+    x, _ = _data(seed=1)
+    g = 48
+    lo = jnp.full((3,), -4.0)
+    spacing = jnp.full((3,), 8.0 / (g - 1))
+    tile = dispatch.resolve_tile("deposit", x.shape[0], g, 3, dtype=x.dtype)
+    a = dispatch.binned_scatter(x, lo, spacing, g, backend="xla", tile=None)
+    b = dispatch.binned_scatter(x, lo, spacing, g, backend="xla", tile=tile)
+    c = kde.scatter_cic(x, lo, spacing, g, tile=tile)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(b), np.asarray(c))
+
+
+def test_predict_and_fit_autotuned_bit_equal(tune_cache):
+    x, y = _data(seed=2)
+    kern = kernels.Matern(1.5)
+    idx = jnp.arange(40)
+    fit0 = nystrom.fit_streaming(kern, x, y, 1e-3, idx, tile=None)
+    tile = dispatch.resolve_tile("gram", x.shape[0], 40, 3, dtype=x.dtype)
+    fit1 = nystrom.fit_streaming(kern, x, y, 1e-3, idx, tile=tile)
+    assert np.array_equal(np.asarray(fit0.beta), np.asarray(fit1.beta))
+    ptile = dispatch.resolve_tile("predict", x.shape[0], 40, 3, dtype=x.dtype)
+    p0 = nystrom.predict_streaming(kern, fit0, x, tile=None)
+    p1 = nystrom.predict_streaming(kern, fit0, x, tile=ptile)
+    assert np.array_equal(np.asarray(p0), np.asarray(p1))
+
+
+def test_gram_executable_cached_and_reused(tune_cache):
+    """tile=None fits route the Gram pass through ONE plan-keyed compiled
+    executable: the second same-shape fit reuses it (no new cache entry),
+    and an explicit-tile fit never populates the cache."""
+    from repro.tuning import autotune as at
+    x, y = _data(seed=4)
+    kern = kernels.Matern(1.5)
+    idx = jnp.arange(40)
+    at._EXECUTABLES.clear()
+    fit0 = nystrom.fit_streaming(kern, x, y, 1e-3, idx, tile=None)
+    assert len(at._EXECUTABLES) == 1
+    fn = next(iter(at._EXECUTABLES.values()))
+    fit1 = nystrom.fit_streaming(kern, x, y, 1e-3, idx, tile=None)
+    assert len(at._EXECUTABLES) == 1
+    assert next(iter(at._EXECUTABLES.values())) is fn
+    assert np.array_equal(np.asarray(fit0.beta), np.asarray(fit1.beta))
+    nystrom.fit_streaming(kern, x, y, 1e-3, idx, tile=512)
+    assert len(at._EXECUTABLES) == 1   # explicit tile stays eager
+
+
+def test_pipeline_autotune_config_runs(tune_cache):
+    """PipelineConfig(tile=None, autotune=True) fits end to end and records
+    the same artifacts as a pinned-tile config (same seed, same numerics —
+    n is small enough that both resolve to a one-shot slab)."""
+    from repro.pipeline.api import PipelineConfig, SAKRRPipeline
+    x, y = _data(n=1500, seed=3)
+    auto = SAKRRPipeline(PipelineConfig(num_landmarks=32)).fit(x, y)
+    assert auto.config.tile is None
+    pinned = SAKRRPipeline(
+        PipelineConfig(num_landmarks=32, tile=1 << 11)).fit(x, y)
+    np.testing.assert_allclose(np.asarray(auto.state.fit.beta),
+                               np.asarray(pinned.state.fit.beta),
+                               rtol=1e-5)
+    measured = SAKRRPipeline(
+        PipelineConfig(num_landmarks=32, autotune=True)).fit(x, y)
+    assert measured.state.fit is not None
+    assert os.path.exists(str(tune_cache))
