@@ -36,6 +36,14 @@ job smokes it at n=8192):
 
   PYTHONPATH=src python -m benchmarks.bench_pipeline --autotune             # n=262144
   PYTHONPATH=src python -m benchmarks.bench_pipeline --autotune --n 8192
+
+Precision-mode comparison (`repro.core.precision`: the fp32 Gram vs the
+Ozaki bf16-split modes x plain/compensated accumulation, with joint
+(tile, precision) autotuned rows and both backends' resolved plans; the
+fast CI job smokes it at n=8192):
+
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --precision            # n=1e6
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --precision --n 8192
 """
 
 from __future__ import annotations
@@ -65,6 +73,68 @@ def append_records(path: str, records: list[dict]) -> None:
             existing = json.load(f)
     with open(path, "w") as f:
         json.dump(existing + records, f, indent=1)
+
+
+def _stage_throughputs(cfg: PipelineConfig, n: int, m: int, d: int,
+                       n_eval: int, seconds: dict) -> dict:
+    """Achieved-GFLOP/s + bytes-moved columns per flop-carrying stage.
+
+    Lowers each stage's streamed op at the benched shape with abstract
+    arguments (no data), reads the compiled program's counted flops/bytes
+    (`roofline.analysis.cost_dict`), and divides by the MEASURED stage
+    wall-clock (`analysis.achieved_throughput`) — so compute-bound stages
+    show gflops_per_s near the device ceiling and bandwidth-bound ones show
+    gbytes_per_s instead.  Stages the run skipped, and backends without
+    cost_analysis, simply drop out."""
+    import jax.numpy as jnp
+
+    from repro.core import kde as core_kde
+    from repro.roofline import analysis
+
+    kern = cfg.build_kernel()
+    out: dict[str, dict] = {}
+    x_t = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    y_t = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def cost_for(build, *args):
+        return analysis.cost_dict(jax.jit(build).lower(*args).compile())
+
+    if seconds.get("kde"):
+        g = cfg.kde_grid_size or core_kde.default_grid_size(d)
+        lo = jax.numpy.zeros((d,), jnp.float32)
+        sp = jax.numpy.full((d,), 1.0 / max(g - 1, 1), jnp.float32)
+        try:
+            cost = cost_for(lambda p: core_kde.scatter_cic(
+                p, lo, sp, g, tile=cfg.tile,
+                accumulator=cfg.accumulator), x_t)
+            out["kde"] = analysis.achieved_throughput(cost, seconds["kde"])
+        except Exception:
+            pass
+    if seconds.get("solve"):
+        xm_t = jax.ShapeDtypeStruct((m, d), jnp.float32)
+        try:
+            cost = cost_for(lambda x, y, xm: nystrom.scan_normal_eq(
+                kern, x, xm, y, tile=cfg.tile, accumulator=cfg.accumulator,
+                precision=cfg.precision), x_t, y_t, xm_t)
+            out["solve"] = analysis.achieved_throughput(cost,
+                                                        seconds["solve"])
+        except Exception:
+            pass
+    if seconds.get("predict"):
+        fitz = nystrom.NystromFit(beta=jnp.zeros((m,), jnp.float32),
+                                  landmarks=jnp.zeros((m, d), jnp.float32),
+                                  landmark_idx=jnp.arange(m), lam=1e-3)
+        xe_t = jax.ShapeDtypeStruct((n_eval, d), jnp.float32)
+        try:
+            cost = cost_for(lambda xe: nystrom.predict_streaming(
+                kern, fitz, xe, tile=cfg.tile,
+                precision=cfg.precision), xe_t)
+            out["predict"] = analysis.achieved_throughput(
+                cost, seconds["predict"])
+        except Exception:
+            pass
+    return {k: {kk: round(vv, 3) for kk, vv in v.items()}
+            for k, v in out.items()}
 
 
 def _stage_subset(cfg: PipelineConfig, names: list[str]):
@@ -122,6 +192,8 @@ def bench_one(n: int, tile: int, m: int | None, seed: int = 0,
         rec["risk"] = pipe.state.scores.get("risk")
         rec["rmse"] = pipe.state.scores.get("rmse")
         rec["d_stat"] = float(pipe.d_stat)
+    rec["stage_throughput"] = _stage_throughputs(
+        cfg, n, m_used, data.x.shape[1], n_eval, pipe.seconds)
     print(",".join(f"{k}={v}" for k, v in rec.items() if k != "stage_seconds"))
     print("  stages: " + ",".join(f"{k}={v}" for k, v in
                                   rec["stage_seconds"].items()))
@@ -288,6 +360,106 @@ def accumulator_bench(n: int = 1_000_000, seed: int = 0) -> list[dict]:
         records.append(rec)
         print(f"{acc},{rec['risk']:.4e},{rec['rmse']:.4e},"
               f"{rec['solve_seconds']},{rec['total_seconds']}")
+    return records
+
+
+# ---------------------------------------------------------------- precision --
+
+def precision_bench(n: int = 1_000_000, seed: int = 0,
+                    json_path: str | None = None) -> list[dict]:
+    """fp32 vs Ozaki bf16-split Gram economics at one n (section
+    `pipeline_precision`).
+
+    Runs the evaluate fold per (precision, accumulator) config — the full
+    3 x 2 matrix at n <= 262144, a reduced headline set above — with the
+    `accumulator_bench` protocol (per-config jit warm, then timed).  The
+    pinned-tile fp32 rows reproduce the PR 6 accumulator protocol; the
+    ``precision=None, tile=None`` rows let the autotuner resolve the
+    (tile, precision) pair jointly.  Autotuned rows also record the joint
+    gram plans BOTH backends would run — on CPU the XLA split twin keeps
+    every mode parity-testable while the recorded Pallas plan is what a
+    real-TPU run would pick.  The acceptance comparison pulls the standing
+    PR 6 rows (section `pipeline_accumulator`) from the trajectory file:
+    the autotuned compensated row must cut solve wall-clock >= 20% at no
+    worse risk.
+    """
+    from repro import tuning
+
+    data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
+    n_eval = min(n, 50_000)
+    base = PipelineConfig(nu=1.5)
+    m = base.resolve_num_landmarks(n)
+    d = data.x.shape[1]
+    plans = {}
+    for b in ("xla", "pallas"):
+        plans[b] = tuning.plan_for("gram", n, m, d, backend=b,
+                                   accumulator="compensated", precision=None,
+                                   measure=(b == "xla")).to_dict()
+    pinned = min(n, 16_384)
+    if n <= 262_144:
+        combos = [(p, a, pinned) for p in ("fp32", "bf16x2", "bf16x3")
+                  for a in ("plain", "compensated")]
+        combos.append((None, "compensated", None))
+    else:
+        combos = [("fp32", "plain", pinned), ("fp32", "compensated", pinned),
+                  (None, "compensated", None), ("bf16x3", "compensated", None)]
+
+    def run_one(p, a, t):
+        cfg = PipelineConfig(nu=1.5, tile=t, precision=p, accumulator=a)
+        pipe = SAKRRPipeline(cfg)
+        t0 = time.perf_counter()
+        scores = pipe.evaluate(data.x, data.y, x_eval=data.x[:n_eval],
+                               y_eval=data.y[:n_eval],
+                               f_star=data.f_star[:n_eval])
+        return cfg, pipe, scores, time.perf_counter() - t0
+
+    for combo in combos:             # per-config jit warm, untimed
+        run_one(*combo)
+    records = []
+    print("precision,accumulator,tile,risk,rmse,solve_seconds,total_seconds")
+    for p, a, t in combos:
+        cfg, pipe, scores, total_s = run_one(p, a, t)
+        m_used = pipe.state.num_landmarks
+        rec = {"section": "pipeline_precision", "n": n, "m": m_used,
+               "precision": p or "auto", "accumulator": a,
+               "tile": t if t is not None else "auto",
+               "risk": scores.get("risk"), "rmse": scores.get("rmse"),
+               "solve_seconds": round(pipe.seconds.get("solve", 0.0), 4),
+               "total_seconds": round(total_s, 4),
+               "stage_seconds": {k: round(v, 4)
+                                 for k, v in pipe.seconds.items()},
+               "stage_throughput": _stage_throughputs(
+                   cfg, n, m_used, d, n_eval, pipe.seconds)}
+        if t is None:
+            rec["plans"] = plans
+        records.append(rec)
+        print(f"{rec['precision']},{a},{rec['tile']},{rec['risk']:.4e},"
+              f"{rec['rmse']:.4e},{rec['solve_seconds']},"
+              f"{rec['total_seconds']}")
+
+    # acceptance basis: the latest standing PR 6 accumulator rows at this n
+    baseline = {}
+    if json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            for r in json.load(f):
+                if (r.get("section") == "pipeline_accumulator"
+                        and r.get("n") == n):
+                    baseline[r.get("accumulator")] = r   # latest row wins
+    auto = next((r for r in records if r["tile"] == "auto"
+                 and r["accumulator"] == "compensated"), None)
+    if auto is not None and "compensated" in baseline:
+        b = baseline["compensated"]
+        auto["baseline_solve_seconds"] = b["solve_seconds"]
+        auto["baseline_risk"] = b["risk"]
+        auto["solve_speedup_vs_baseline"] = round(
+            b["solve_seconds"] / max(auto["solve_seconds"], 1e-9), 2)
+        print(f"autotuned compensated solve {auto['solve_seconds']}s vs "
+              f"standing baseline {b['solve_seconds']}s -> "
+              f"{auto['solve_speedup_vs_baseline']}x at risk "
+              f"{auto['risk']:.4e} (baseline {b['risk']:.4e})")
+    print("joint gram plans: " + ", ".join(
+        f"{b}=(tile={pl['tile']}, bm={pl['bm']}, bn={pl['bn']}, "
+        f"{pl['precision']})" for b, pl in plans.items()))
     return records
 
 
@@ -463,8 +635,11 @@ def main(json_out: str | None = "BENCH_pipeline.json",
          n_max: int = 262_144, n_only: int | None = None,
          stages: list[str] | None = None, compare: bool = False,
          calibrate: bool = False, accumulator: bool = False,
-         autotune: bool = False) -> None:
-    if autotune:
+         autotune: bool = False, precision: bool = False) -> None:
+    if precision:
+        print("\n## pipeline precision (fp32 vs Ozaki bf16-split Gram)")
+        records = precision_bench(n=n_only or 1_000_000, json_path=json_out)
+    elif autotune:
         print("\n## pipeline autotune (fixed tiles vs roofline autotuner)")
         records = autotune_bench(n=n_only or 262_144, json_path=json_out)
     elif accumulator:
@@ -521,9 +696,15 @@ if __name__ == "__main__":
                          "(repro.tuning): clears the plan cache, measures "
                          "cold, checks the warm cache hit, records the "
                          "chosen plans (default n=262144)")
+    ap.add_argument("--precision", action="store_true",
+                    help="fp32 vs Ozaki bf16-split Gram precision modes x "
+                         "plain/compensated accumulation, with joint "
+                         "(tile, precision) autotuned rows and both "
+                         "backends' resolved plans (default n=1e6)")
     ap.add_argument("--json", default="BENCH_pipeline.json")
     args = ap.parse_args()
     main(json_out=args.json or None, n_max=args.n_max, n_only=args.n,
          stages=args.stages.split(",") if args.stages else None,
          compare=args.compare, calibrate=args.calibrate,
-         accumulator=args.accumulator, autotune=args.autotune)
+         accumulator=args.accumulator, autotune=args.autotune,
+         precision=args.precision)

@@ -32,7 +32,9 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import precision as precision_mod
 from repro.core import streaming
 from repro.core.kernels import Kernel, kernel_matrix, sentinel_is_safe
 from repro.core.sampling import sample_with_replacement
@@ -235,20 +237,61 @@ def _scan_steps(n: int, tile: int, x: Array,
     return -(-n_loc // min(grain, n_loc))
 
 
-def _resolve_gram_tile(tile: int | None, x: Array, xm: Array,
-                       backend: str | None, accumulator: str) -> int | None:
-    """``tile=None`` -> the autotuned XLA engine tile (`repro.tuning` via
-    `dispatch.resolve_tile`); explicit tiles pass through untouched, and the
+def _resolve_gram_exec(tile: int | None, precision: str | None, x: Array,
+                       xm: Array, backend: str | None, accumulator: str
+                       ) -> tuple[int | None, str]:
+    """Resolve the Gram stream's (tile, precision) execution pair.
+
+    ``tile=None`` -> the autotuned XLA engine tile (`repro.tuning` via
+    `dispatch.resolve_plan`); explicit tiles pass through untouched, and the
     Pallas gram path keeps None (it tunes bm/bn inside dispatch instead).
-    Resolution is per-chip: under an active mesh each device streams only
-    n / row_shard_count rows, which is the stream the tile must fit."""
+    ``precision=None`` resolves from the same plan — the autotuner picks
+    the (tile, precision) pair JOINTLY — EXCEPT when the caller pinned the
+    tile explicitly: an explicit-tile call never consults the planner, so
+    its precision defaults to the historical "fp32" (bit parity with
+    pre-precision code).  Resolution is per-chip: under an active mesh each
+    device streams only n / row_shard_count rows, which is the stream the
+    tile must fit."""
     from repro.kernels import dispatch
-    if tile is not None or dispatch.resolve(backend) == "pallas":
-        return tile
     n_loc = max(1, x.shape[0] // streaming.row_shard_count(x.shape))
-    return dispatch.resolve_tile("gram", n_loc, xm.shape[0], x.shape[1],
-                                 dtype=x.dtype, backend="xla",
-                                 accumulator=accumulator)
+    if dispatch.resolve(backend) == "pallas":
+        if precision is None:
+            precision = dispatch.resolve_plan(
+                "gram", n_loc, xm.shape[0], x.shape[1], dtype=x.dtype,
+                backend="pallas", accumulator=accumulator,
+                precision=None).precision
+        return tile, precision
+    if tile is None:
+        plan = dispatch.resolve_plan("gram", n_loc, xm.shape[0], x.shape[1],
+                                     dtype=x.dtype, backend="xla",
+                                     accumulator=accumulator,
+                                     precision=precision)
+        return plan.tile, (precision or plan.precision)
+    return tile, (precision or "fp32")
+
+
+def _eff_eps_scale(accumulator: str, steps: int, precision: str) -> float:
+    """Solve truncation-floor scale: accumulation strategy x precision mode.
+
+    `streaming.eps_scale` covers the cross-tile accumulation term; the
+    precision mode multiplies in its within-tile product floor
+    (`precision.EPS_SCALE` — bf16x2 RAISES the floor 256x, fp32/bf16x3
+    leave it untouched)."""
+    return streaming.eps_scale(accumulator, steps) * \
+        precision_mod.EPS_SCALE.get(precision or "fp32", 1.0)
+
+
+def _apply_beta(k: Array, beta: Array, precision: str | None) -> Array:
+    """Predict-side (tile, m) x (m[, L]) matmul under a precision mode.
+
+    fp32 keeps the historical ``@`` (bit parity with the dense oracle);
+    the bf16 modes route through the same split-word decomposition as the
+    Gram contraction."""
+    if precision in (None, "fp32"):
+        return k @ beta
+    dims = (((1,), (0,)), ((), ()))
+    return precision_mod.split_dot(k, beta, dims, precision=precision,
+                                   acc=k.dtype)
 
 
 def _resolve_predict_tile(tile: int | None, x_new: Array, xm: Array,
@@ -267,8 +310,8 @@ def _resolve_predict_tile(tile: int | None, x_new: Array, xm: Array,
 
 def _gram_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array, *,
                     tile: int | None, autotuned: bool, backend: str | None,
-                    interpret: bool | None, accumulator: str
-                    ) -> tuple[Array, Array]:
+                    interpret: bool | None, accumulator: str,
+                    precision: str = "fp32") -> tuple[Array, Array]:
     """The (G, rhs) accumulation behind `fit_streaming[_multi]`.
 
     When the tile came from the autotuner (`autotuned=True`, i.e. the caller
@@ -288,7 +331,7 @@ def _gram_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array, *,
             and jax.core.trace_state_clean()):
         from repro import tuning
         key = ("gram_normal_eq", kernel, x.shape, y.shape, xm.shape,
-               str(x.dtype), str(y.dtype), tile, accumulator)
+               str(x.dtype), str(y.dtype), tile, accumulator, precision)
         try:
             hash(key)
         except TypeError:   # kernel with array-valued params: stay eager
@@ -298,15 +341,18 @@ def _gram_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array, *,
                 key,
                 lambda: lambda x_, y_, xm_: streaming_normal_eq(
                     kernel, x_, y_, xm_, tile=tile, backend=backend,
-                    interpret=interpret, accumulator=accumulator))
+                    interpret=interpret, accumulator=accumulator,
+                    precision=precision))
             return fn(x, y, xm)
     return streaming_normal_eq(kernel, x, y, xm, tile=tile, backend=backend,
-                               interpret=interpret, accumulator=accumulator)
+                               interpret=interpret, accumulator=accumulator,
+                               precision=precision)
 
 
 def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
                    *, tile: int | None = None, accumulator: str = "plain",
-                   finalize: bool = True) -> tuple[Array, Array]:
+                   finalize: bool = True,
+                   precision: str | None = "fp32") -> tuple[Array, Array]:
     """(K_nm^T K_nm, K_nm^T w) accumulated over `tile`-row slabs.
 
     The (tile, m) kernel slab is rebuilt in registers each step and dies
@@ -319,19 +365,26 @@ def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
     ``tile=None`` autotunes the slab size (`repro.tuning` — same numbers
     as passing the resolved integer explicitly).  `finalize=False` returns
     the raw accumulator state for a mesh psum.
+
+    ``w`` may be (n,) or (n, k) — extra response columns ride the same
+    pass (rhs matches: (m,) or (m, k)).  ``precision`` picks the
+    G-contraction mode (`repro.core.precision`): "fp32" is literally the
+    historical single dot_general; the bf16 modes are the XLA split-dot
+    twin of the Pallas bf16 kernel (slow on CPU, parity-testable anywhere).
     """
-    tile = _resolve_gram_tile(tile, x, xm, "xla", accumulator)
+    tile, precision = _resolve_gram_exec(tile, precision, x, xm, "xla",
+                                         accumulator)
     m = xm.shape[0]
     acc = jnp.promote_types(x.dtype, jnp.float32)  # f64 under enable_x64
 
     def emit(xi, wi):
         k = kernel_matrix(kernel, xi, xm).astype(acc)  # (tile, m)
-        return (jax.lax.dot_general(k, k, (((0,), (0,)), ((), ())),
-                                    preferred_element_type=acc),
+        return (precision_mod.split_dot(k, k, (((0,), (0,)), ((), ())),
+                                        precision=precision, acc=acc),
                 jax.lax.dot_general(k, wi, (((0,), (0,)), ((), ())),
                                     preferred_element_type=acc))
 
-    init = (jnp.zeros((m, m), acc), jnp.zeros((m,), acc))
+    init = (jnp.zeros((m, m), acc), jnp.zeros((m,) + w.shape[1:], acc))
     return streaming.tile_reduce(emit, x, (w.astype(acc),), tile=tile,
                                  init=init, accumulator=accumulator,
                                  pad="sentinel", finalize=finalize)
@@ -342,7 +395,8 @@ def streaming_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array,
                         backend: str | None = None,
                         interpret: bool | None = None,
                         accumulator: str = "plain",
-                        finalize: bool = True) -> tuple[Array, Array]:
+                        finalize: bool = True,
+                        precision: str | None = None) -> tuple[Array, Array]:
     """Mesh-aware (G, rhs): shards rows over the "rows" logical axis.
 
     With an active `repro.distributed.sharding` mesh whose "rows" rule maps
@@ -356,14 +410,15 @@ def streaming_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array,
     """
     from repro.kernels import dispatch
 
-    tile = _resolve_gram_tile(tile, x, xm, backend, accumulator)
+    tile, precision = _resolve_gram_exec(tile, precision, x, xm, backend,
+                                         accumulator)
 
     def local(x_loc, w_loc, xm_rep):
         return dispatch.gram_accumulate(kernel, x_loc, xm_rep, w_loc,
                                         backend=backend, tile=tile,
                                         interpret=interpret,
                                         accumulator=accumulator,
-                                        finalize=False)
+                                        finalize=False, precision=precision)
 
     return streaming.mesh_reduce(local, (x, y), (xm,),
                                  accumulator=accumulator, finalize=finalize)
@@ -382,6 +437,7 @@ def fit_streaming(
     jitter: float = 1e-6,
     weights: Array | None = None,
     accumulator: str = "plain",
+    precision: str | None = None,
 ) -> NystromFit:
     """`fit_from_landmarks` without ever materializing K_nm.
 
@@ -393,24 +449,30 @@ def fit_streaming(
     are untouched.  `accumulator="compensated"` streams the Gram through the
     two-float error-carrying sum (`repro.core.streaming`) and lowers the
     solve's spectral noise floor to match — fp32 then keeps whitened
-    directions the plain accumulation must truncate.
+    directions the plain accumulation must truncate.  ``precision`` picks
+    the Gram-contraction mode (`repro.core.precision`; None resolves it
+    jointly with an autotuned tile, or to "fp32" when the tile is pinned)
+    and scales the solve's truncation floor by `precision.EPS_SCALE`.
     """
     _require_sentinel_safe(kernel)
     n = x.shape[0]
     xm = jnp.take(x, landmark_idx, axis=0)
     autotuned = tile is None
-    tile = _resolve_gram_tile(tile, x, xm, backend, accumulator)
+    tile, precision = _resolve_gram_exec(tile, precision, x, xm, backend,
+                                         accumulator)
     g, rhs = _gram_normal_eq(kernel, x, y, xm, tile=tile,
                              autotuned=autotuned, backend=backend,
-                             interpret=interpret, accumulator=accumulator)
+                             interpret=interpret, accumulator=accumulator,
+                             precision=precision)
     # k_mm is O(m^2) work — the core path keeps it in the input dtype, which
     # the dense solve also uses (dtype parity matters more than MXU here).
     k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
     if weights is not None:
         g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
     beta = solve_normal_eq(g, rhs, k_mm, n, lam, jitter=jitter,
-                           eps_scale=streaming.eps_scale(
-                               accumulator, _scan_steps(n, tile, x, backend)))
+                           eps_scale=_eff_eps_scale(
+                               accumulator, _scan_steps(n, tile, x, backend),
+                               precision))
     if weights is not None:
         beta = weights.astype(beta.dtype) * beta
     return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx,
@@ -430,6 +492,7 @@ def fit_streaming_multi(
     jitter: float = 1e-6,
     weights: Array | None = None,
     accumulator: str = "plain",
+    precision: str | None = None,
 ) -> list[NystromFit]:
     """`fit_streaming` over a lam grid at ONE Gram-accumulation cost.
 
@@ -446,26 +509,166 @@ def fit_streaming_multi(
     n = x.shape[0]
     xm = jnp.take(x, landmark_idx, axis=0)
     autotuned = tile is None
-    tile = _resolve_gram_tile(tile, x, xm, backend, accumulator)
+    tile, precision = _resolve_gram_exec(tile, precision, x, xm, backend,
+                                         accumulator)
     g, rhs = _gram_normal_eq(kernel, x, y, xm, tile=tile,
                              autotuned=autotuned, backend=backend,
-                             interpret=interpret, accumulator=accumulator)
+                             interpret=interpret, accumulator=accumulator,
+                             precision=precision)
     k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
     if weights is not None:
         g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
     betas = solve_normal_eq_multi(
         g, rhs, k_mm, n, lams, jitter=jitter,
-        eps_scale=streaming.eps_scale(accumulator,
-                                      _scan_steps(n, tile, x, backend)))
+        eps_scale=_eff_eps_scale(accumulator,
+                                 _scan_steps(n, tile, x, backend), precision))
     if weights is not None:
         betas = weights.astype(betas.dtype)[None, :] * betas
     return [NystromFit(beta=betas[i], landmarks=xm, landmark_idx=landmark_idx,
                        lam=float(lam)) for i, lam in enumerate(lams)]
 
 
+def fit_streaming_scored(
+    kernel: Kernel,
+    x: Array,
+    y: Array,
+    lam: float,
+    landmark_idx: Array,
+    *,
+    f_star: Array | None = None,
+    tile: int | None = None,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    jitter: float = 1e-6,
+    weights: Array | None = None,
+    accumulator: str = "plain",
+    precision: str | None = None,
+) -> tuple[NystromFit, dict]:
+    """`fit_streaming` + the in-sample score moments in ONE pass over x.
+
+    The in-sample MSE and risk are quadratic forms in quantities the Gram
+    stream already touches:
+
+        sum_i (f(x_i) - t_i)^2 = beta^T G beta - 2 beta^T (K_nm^T t) + t^T t
+
+    for targets t = y (MSE) or t = f_star (risk), with G = K_nm^T K_nm.
+    So instead of a separate predict pass, the extra responses ride the rhs
+    slot of the normal-equation stream as additional columns of w — one
+    widened (n, 1+r) aux through the SAME tile scan (`multi_reduce`
+    semantics via the widened rhs; Pallas carries the columns in its rhs
+    block).  Returns ``(fit, moments)`` where moments holds the
+    *unweighted* G, the per-target K_nm^T t columns, and the host-f64
+    t^T t scalars — `pipeline.stages.ScoreStage` assembles the scores in
+    f64 (the two big terms cancel to ~n * mse, so f64 assembly keeps ~7
+    significant digits of the score; locked at rtol 2e-3 against the
+    predict-pass scores in tests/test_multi_reduce.py).
+
+    Eager-only (host-computes t^T t); the pipeline's `evaluate()` is the
+    intended caller.
+    """
+    _require_sentinel_safe(kernel)
+    n = x.shape[0]
+    xm = jnp.take(x, landmark_idx, axis=0)
+    autotuned = tile is None
+    tile, precision = _resolve_gram_exec(tile, precision, x, xm, backend,
+                                         accumulator)
+    cols = [jnp.asarray(y, x.dtype)]
+    if f_star is not None:
+        cols.append(jnp.asarray(f_star, x.dtype))
+    wmat = jnp.stack(cols, axis=1)                       # (n, 1 + r)
+    g, rr = _gram_normal_eq(kernel, x, wmat, xm, tile=tile,
+                            autotuned=autotuned, backend=backend,
+                            interpret=interpret, accumulator=accumulator,
+                            precision=precision)
+    rhs = rr[:, 0]
+    y64 = np.asarray(y, np.float64)
+    moments = {"g": g, "rhs_y": rr[:, 0], "n_eval": int(n),
+               "y_sq": float(y64 @ y64),
+               "rhs_f": None, "f_sq": None}
+    if f_star is not None:
+        f64 = np.asarray(f_star, np.float64)
+        moments["rhs_f"] = rr[:, 1]
+        moments["f_sq"] = float(f64 @ f64)
+    k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
+    g_s, rhs_s, k_mm_s = g, rhs, k_mm
+    if weights is not None:
+        g_s, rhs_s, k_mm_s = weighted_normal_eq(g, rhs, k_mm, weights)
+    beta = solve_normal_eq(g_s, rhs_s, k_mm_s, n, lam, jitter=jitter,
+                           eps_scale=_eff_eps_scale(
+                               accumulator, _scan_steps(n, tile, x, backend),
+                               precision))
+    if weights is not None:
+        beta = weights.astype(beta.dtype) * beta
+    fit_ = NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx,
+                      lam=lam)
+    return fit_, moments
+
+
+def val_mse_streaming_multi(kernels: Sequence[Kernel],
+                            fits_by_h: Sequence[Sequence[NystromFit]],
+                            x_val: Array, y_val: Array, *,
+                            tile: int | None = None,
+                            backend: str | None = None,
+                            precision: str | None = None) -> Array:
+    """Validation MSE for H bandwidth candidates x L lams in ONE x_val pass.
+
+    The calibration sweep historically re-streamed x_val once per bandwidth
+    (H `predict_streaming_multi` calls).  The per-h predictions only meet
+    at the end (a mean of squared errors), so the H reductions fuse into a
+    single `streaming.multi_reduce` scan: slot h builds its kernel tile
+    K_h(x_tile, X_m^h) once, applies all L betas as one matmul, and emits
+    the per-lam squared-error sums.  Returns the (H, L) val-MSE matrix;
+    each entry matches the sequential predict-then-mean to fp32
+    reduction-order tolerance (same products, tile-major instead of
+    row-major summation).  Mesh behavior: row slabs of x_val reduce
+    locally, sums psum across chips (`streaming.mesh_reduce`).
+    """
+    from repro.kernels import dispatch
+
+    if len(kernels) != len(fits_by_h):
+        raise ValueError("one kernel per bandwidth candidate required")
+    for k in kernels:
+        _require_sentinel_safe(k)
+    n_val = x_val.shape[0]
+    big = len(fits_by_h)
+    xms = tuple(fits[0].landmarks for fits in fits_by_h)
+    betas = tuple(jnp.stack([f.beta for f in fits], axis=1)
+                  for fits in fits_by_h)                  # (m, L) each
+    acc = jnp.promote_types(x_val.dtype, jnp.float32)
+    tile = _resolve_predict_tile(tile, x_val, xms[0], backend)
+    multi = streaming.MultiAccumulator(("plain",) * big)
+    rep: list[Array] = []
+    for xm, b in zip(xms, betas):
+        rep += [xm, b]
+
+    def local(xv, yv, *rep_args):
+        def emit(xt, yt):
+            outs = []
+            for h in range(big):
+                xm, b = rep_args[2 * h], rep_args[2 * h + 1]
+                k = dispatch.kernel_matrix(kernels[h], xt, xm,
+                                           backend=backend).astype(acc)
+                # sentinel rows give k == 0 and carry zero-padded y, so
+                # padded errors are exactly (0 - 0)^2 = 0.
+                e = _apply_beta(k, b.astype(acc), precision) \
+                    - yt[:, None].astype(acc)
+                outs.append(jnp.sum(e * e, axis=0))       # (L,)
+            return tuple(outs)
+
+        inits = tuple(jnp.zeros((b.shape[1],), acc) for b in betas)
+        return streaming.multi_reduce(emit, xv, (yv,), tile=tile,
+                                      inits=inits, pad="sentinel",
+                                      finalize=False)
+
+    sums = streaming.mesh_reduce(local, (x_val, y_val), tuple(rep),
+                                 accumulator=multi, finalize=True)
+    return jnp.stack(sums) / n_val
+
+
 def predict_streaming_multi(kernel: Kernel, fits: Sequence[NystromFit],
                             x_new: Array, *, tile: int | None = None,
-                            backend: str | None = None) -> Array:
+                            backend: str | None = None,
+                            precision: str | None = None) -> Array:
     """Batched predict for several fits SHARING one landmark set: (L, n_new).
 
     The kernel tile K(x_tile, X_m) is the expensive part of a predict and is
@@ -483,8 +686,8 @@ def predict_streaming_multi(kernel: Kernel, fits: Sequence[NystromFit],
 
     def local(x_loc, xm, betas):
         def one(xt):
-            return dispatch.kernel_matrix(kernel, xt, xm,
-                                          backend=backend) @ betas  # (t, L)
+            k = dispatch.kernel_matrix(kernel, xt, xm, backend=backend)
+            return _apply_beta(k, betas, precision)       # (t, L)
 
         return streaming.tile_map(one, x_loc, tile=tile)
 
@@ -493,7 +696,8 @@ def predict_streaming_multi(kernel: Kernel, fits: Sequence[NystromFit],
 
 def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
                       *, tile: int | None = None,
-                      backend: str | None = None) -> Array:
+                      backend: str | None = None,
+                      precision: str | None = None) -> Array:
     """Batched predict: O(tile * m) memory, any n_new.
 
     ``tile=None`` autotunes the slab size (`repro.tuning` via
@@ -514,8 +718,8 @@ def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
 
     def local(x_loc, xm, beta):
         def one(xt):
-            return dispatch.kernel_matrix(kernel, xt, xm,
-                                          backend=backend) @ beta
+            k = dispatch.kernel_matrix(kernel, xt, xm, backend=backend)
+            return _apply_beta(k, beta, precision)
 
         return streaming.tile_map(one, x_loc, tile=tile)
 

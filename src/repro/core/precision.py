@@ -1,0 +1,158 @@
+"""Split-precision multi-word dot products (Ozaki-style bf16 block split).
+
+The streaming Gram pass spends almost all of its flops in one syrk-shaped
+contraction per tile, ``G += K^T K``.  On MXU-class hardware that contraction
+runs at full rate only for bf16 operands; fp32 inputs fall back to a slower
+pass.  The classic fix (Ozaki et al.; Henry/Tang/Heinecke for bf16) is to
+split each fp32 operand into a few bf16 *words* by truncate-and-subtract
+
+    w0 = rint(r / d) * d,  r -= w0,  d /= 256,  w1 = rint(r / d) * d, ...
+
+with ``d`` a power-of-two grid step shared by every element of a contraction
+fiber (2^(floor(log2 amax) - 7), amax over the contracted axis), and rebuild
+the fp32 product from the pairwise cross terms.  The FIXED-POINT grid — not
+a per-element Dekker truncation — is what lands the result *below* the
+plain-fp32 rounding floor:
+
+* each slice is an integer multiple of its grid step in [-2^8, 2^8], so the
+  bf16 cast is exact (<= 8 significand bits + exponent), and
+* a slice x slice partial product is an integer multiple of the two steps'
+  product, <= 2^16 steps — so an fp32-accumulated partial matmul over <= 256
+  contracted elements stays <= 2^24 steps and rounds NOTHING, in any
+  summation order.  (Longer contractions round integers, creeping back at
+  ~2^-19 relative — still far below an fp32 gemm.  A per-element relative
+  split does not get this: its partial gemms round like an fp32 dot and,
+  empirically, with a systematic bias that survives compensated cross-tile
+  summation.)
+
+``bf16x3`` therefore carries only the dropped p+q >= 3 cross terms
+(~2^-24 of the grid scale) — below a single fp32 dot's accumulation error.
+``bf16x2`` drops the third word: ~2x fewer partial matmuls at a ~2^-16
+relative floor — faster, but *less* accurate than fp32, so the solver widens
+its truncation floor via :data:`EPS_SCALE`.  Exactness of the partials also
+makes the Pallas kernel and the XLA twin agree bit-for-bit on each partial —
+only the combine order differs across backends.
+
+The same decomposition is expressed two ways:
+
+* **XLA twin** — :func:`split_dot` builds the partials with plain
+  ``lax.dot_general(..., preferred_element_type=f32)`` on bf16 operands.
+  This runs (slowly) on CPU, which keeps every precision mode
+  parity-testable without a TPU.
+* **Pallas** — the gram kernel body calls :func:`split_words` /
+  :func:`split_dot_partials` directly and folds each partial into its
+  (hi, lo) VMEM accumulator.
+
+Only the *kernel-value* tiles are ever split.  Distances keep the exact
+per-coordinate ``EXACT_DIST_D`` path (see kernels/gram/kernel.py): splitting
+coordinates before the difference would re-introduce exactly the
+near-origin cancellation that path exists to avoid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.streaming import two_sum
+
+Array = jax.Array
+
+# Supported precision modes for the Gram contraction.  "fp32" is the
+# historical single dot_general — bit-identical to pre-precision code.
+PRECISIONS = ("fp32", "bf16x2", "bf16x3")
+
+# Number of bf16 words per fp32 operand.
+WORDS = {"fp32": 1, "bf16x2": 2, "bf16x3": 3}
+
+# Cross-term exponent pairs (p, q) meaning a_word[p] x b_word[q], ordered
+# smallest-magnitude-first so the running sum accumulates the tail before
+# the dominant w0 x w0 term lands.  bf16x2 keeps p+q <= 1 (drops w1 x w1,
+# ~2^-16 relative); bf16x3 keeps p+q <= 2 (drops only terms <= 2^-24
+# relative, i.e. below the fp32 product floor).
+_PAIRS = {
+    2: ((1, 0), (0, 1), (0, 0)),
+    3: ((1, 1), (2, 0), (0, 2), (1, 0), (0, 1), (0, 0)),
+}
+
+# Multiplier on the solver's spectral truncation floor.  bf16x2 raises the
+# Gram noise floor to ~2^-16 relative (256x fp32's 2^-24 product floor);
+# fp32 and bf16x3 sit at or below the fp32 floor.
+EPS_SCALE = {"fp32": 1.0, "bf16x2": 256.0, "bf16x3": 1.0}
+
+
+def check(precision: str) -> str:
+    """Validate and return a precision mode name."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}")
+    return precision
+
+
+def split_words(x: Array, words: int, *, axis=None) -> tuple[Array, ...]:
+    """Ozaki fixed-point slicing of fp32 ``x`` into bf16 words.
+
+    Every element of a contraction fiber (``axis``; the whole array when
+    ``None``) shares one power-of-two grid step ``2^(floor(log2 amax) - 7)``,
+    so each word is an integer multiple of its step in [-2^8, 2^8] — exactly
+    bf16-representable, and exactly fp32-accumulable in the partial matmuls
+    (see module docstring).  Successive words refine the grid by 2^-8; the
+    residual after ``words`` slices is <= half the last step
+    (~``amax * 2^(-8*words - 1)`` absolute).  All slice arithmetic
+    (power-of-two divide, rint, multiply, subtract) is exact in fp32.
+    """
+    r = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(r), axis=axis, keepdims=axis is not None)
+    # floor(log2)+1 over-approximates ceil(log2) even when log2 of an exact
+    # power of two comes back a hair low; zero fibers get a harmless unit step.
+    e = jnp.floor(jnp.log2(jnp.where(amax > 0, amax, 1.0)))
+    step = jnp.where(amax > 0, jnp.exp2(e - 7.0), 1.0).astype(jnp.float32)
+    parts = []
+    for _ in range(words):
+        w = jnp.rint(r / step) * step
+        parts.append(w.astype(jnp.bfloat16))
+        r = r - w
+        step = step * jnp.float32(2.0 ** -8)
+    return tuple(parts)
+
+
+def split_dot_partials(a: Array, b: Array, dims, precision: str,
+                       acc=jnp.float32) -> tuple[Array, ...]:
+    """The ordered partial products of a split-precision ``dot_general``.
+
+    Each partial is one bf16 x bf16 ``dot_general`` accumulated in ``acc``
+    (exact for contractions up to 256 elements, near-exact beyond).
+    Operands are sliced on per-fiber grids over their contracted axes.
+    Partials are returned smallest-magnitude-first; the caller folds them
+    into its accumulator (plain sum, chained two-sum, or a (hi, lo)
+    compensated store).
+    """
+    words = WORDS[check(precision)]
+    if words == 1:
+        return (jax.lax.dot_general(a, b, dims, preferred_element_type=acc),)
+    (ca, cb), _ = dims
+    aw = split_words(a, words, axis=tuple(ca))
+    bw = split_words(b, words, axis=tuple(cb))
+    return tuple(
+        jax.lax.dot_general(aw[p], bw[q], dims, preferred_element_type=acc)
+        for p, q in _PAIRS[words])
+
+
+def split_dot(a: Array, b: Array, dims, *, precision: str = "fp32",
+              acc=jnp.float32) -> Array:
+    """``lax.dot_general`` with a split-precision operand decomposition.
+
+    ``precision="fp32"`` is literally a single
+    ``dot_general(a, b, dims, preferred_element_type=acc)`` — bit-identical
+    to calling lax directly.  The bf16 modes combine their partials through
+    a chained two-sum (running (s, e) pair, collapsed at the end) so the
+    combination itself never dominates the split error.
+    """
+    parts = split_dot_partials(a, b, dims, precision, acc)
+    if len(parts) == 1:
+        return parts[0]
+    s, e = parts[0], jnp.zeros_like(parts[0])
+    for p in parts[1:]:
+        s, err = two_sum(s, p)
+        e = e + err
+    return s + e

@@ -13,6 +13,9 @@ owns that plumbing once:
   * `tile_reduce`  — row-slab tiling, ragged-tail padding (sentinel rows for
     kernel maps, zero rows + zero weights for deposits), a `lax.scan` over
     the slabs, and a pluggable accumulator strategy;
+  * `multi_reduce` — one tile scan driving N pluggable accumulators at once
+    (fused Gram+rhs+score-moment passes; `MultiAccumulator` composes per-slot
+    strategies tuple-wise and is bit-equal to sequential passes per slot);
   * `tile_map`     — the same tiling for per-row outputs (predict);
   * `mesh_reduce` / `mesh_map` — optional shard_map execution over the
     "rows" logical axis (`repro.distributed.sharding`), with the accumulator
@@ -133,6 +136,53 @@ class CompensatedAccumulator:
         return jax.tree.map(jnp.add, hi, lo)
 
 
+class MultiAccumulator:
+    """Tuple-of-slots composition: slot i runs its own strategy + combine.
+
+    State is a tuple of per-slot accumulator states, so one tile scan can
+    drive N independent reductions (Gram + rhs + predict moments + ...) off
+    a single pass over x.  Each slot's arithmetic is the *same op sequence*
+    it would run in its own `tile_reduce` — XLA never reassociates floats —
+    so a fused plain-slot reduction is bit-equal to the sequential one
+    (locked by tests/test_multi_reduce.py).  Compensated slots keep their
+    (hi, lo) pair per slot; `psum`/`finalize` delegate slot-wise, which is
+    what lets the pair survive a fused cross-chip reduction un-collapsed.
+    """
+
+    def __init__(self, accumulators: Sequence[str | Any],
+                 combines: Sequence[Callable | None] | None = None):
+        self.accumulators = tuple(get(a) for a in accumulators)
+        if combines is None:
+            combines = (None,) * len(self.accumulators)
+        if len(combines) != len(self.accumulators):
+            raise ValueError("combines and accumulators length mismatch")
+        self.combines = tuple(c if c is not None else _tree_add
+                              for c in combines)
+        self.name = "multi(" + ",".join(
+            a.name for a in self.accumulators) + ")"
+
+    def init(self, zeros):
+        if len(zeros) != len(self.accumulators):
+            raise ValueError(
+                f"init expects {len(self.accumulators)} slot zeros, "
+                f"got {len(zeros)}")
+        return tuple(a.init(z) for a, z in zip(self.accumulators, zeros))
+
+    def add(self, state, update, combine):
+        del combine  # per-slot combines are fixed at construction
+        return tuple(
+            a.add(s, u, c) for a, s, u, c in
+            zip(self.accumulators, state, update, self.combines))
+
+    def psum(self, state, axes):
+        return tuple(
+            a.psum(s, axes) for a, s in zip(self.accumulators, state))
+
+    def finalize(self, state):
+        return tuple(
+            a.finalize(s) for a, s in zip(self.accumulators, state))
+
+
 _STRATEGIES = {"plain": PlainAccumulator(), "compensated": CompensatedAccumulator()}
 
 
@@ -223,6 +273,36 @@ def tile_reduce(
 
     state, _ = jax.lax.scan(step, state, slabs)
     return acc.finalize(state) if finalize else state
+
+
+def multi_reduce(
+    emit: Callable[..., Any],
+    x: Array,
+    aux: Sequence[Array] = (),
+    *,
+    tile: int | None,
+    inits: Sequence[Any],
+    accumulators: Sequence[str | Any] | None = None,
+    combines: Sequence[Callable | None] | None = None,
+    pad: str = "sentinel",
+    finalize: bool = True,
+) -> Any:
+    """One tile scan driving N pluggable accumulators at once.
+
+    ``emit(x_tile, *aux_tiles)`` returns a TUPLE of per-slot updates —
+    typically sharing expensive intermediates (the kernel tile) across
+    slots.  Slot i is accumulated by ``accumulators[i]`` (default: all
+    plain) folding with ``combines[i]`` (default: leafwise add) into
+    ``inits[i]``.  Everything else (padding, scan, finalize semantics)
+    matches `tile_reduce`; with ``finalize=False`` the returned state is a
+    tuple of per-slot states — the form `mesh_reduce` psums when given the
+    same `MultiAccumulator` instance.
+    """
+    accs = tuple(accumulators) if accumulators is not None else (
+        ("plain",) * len(tuple(inits)))
+    multi = MultiAccumulator(accs, combines)
+    return tile_reduce(emit, x, aux, tile=tile, init=tuple(inits),
+                       accumulator=multi, pad=pad, finalize=finalize)
 
 
 def tile_map(

@@ -54,37 +54,43 @@ def kernel_matrix(kernel: core_kernels.Kernel, x: Array,
 
 def resolve_plan(op: str, n: int, m: int, d: int, *,
                  dtype=None, backend: str | None = None,
-                 accumulator: str = "plain"):
+                 accumulator: str = "plain",
+                 precision: str | None = "fp32"):
     """Autotuned execution plan for a streamed op (`repro.tuning`).
 
     This is THE boundary where ``tile=None`` (and Pallas bm/bn defaults)
     become concrete integers: the roofline-ranked, optionally
     micro-benchmarked, cache-persisted choice for (device, backend, op,
-    shape bucket).  Pure shape plumbing — the plan never perturbs
-    numerics, so op(tile=None) is bit-equal to op(tile=plan.tile).
+    shape bucket).  Pure shape plumbing when precision is pinned — the
+    plan never perturbs numerics, so op(tile=None) is bit-equal to
+    op(tile=plan.tile).  ``precision=None`` (gram only) asks the model to
+    resolve the (tile, precision) pair JOINTLY: the plan's ``precision``
+    field then carries the chosen Gram-contraction mode.
     """
     import jax.numpy as jnp
 
     from repro import tuning
     return tuning.plan_for(op, int(n), int(m), int(d),
                            dtype=dtype if dtype is not None else jnp.float32,
-                           backend=resolve(backend), accumulator=accumulator)
+                           backend=resolve(backend), accumulator=accumulator,
+                           precision=precision)
 
 
 def resolve_tile(op: str, n: int, m: int, d: int, *,
                  dtype=None, backend: str | None = None,
-                 accumulator: str = "plain") -> int:
+                 accumulator: str = "plain",
+                 precision: str | None = "fp32") -> int:
     """`resolve_plan(...).tile` — the engine-tile shorthand the streaming
     entry points (`repro.core.nystrom`) use for their ``tile=None``."""
     return resolve_plan(op, n, m, d, dtype=dtype, backend=backend,
-                        accumulator=accumulator).tile
+                        accumulator=accumulator, precision=precision).tile
 
 
 def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
                     w: Array, *, backend: str | None = None,
                     tile: int | None = None, interpret: bool | None = None,
                     accumulator: str = "plain", finalize: bool = True,
-                    **kw) -> tuple:
+                    precision: str | None = None, **kw) -> tuple:
     """(K_nm^T K_nm, K_nm^T w) through the resolved backend.
 
     The Pallas path is the fused one-pass `gram` kernel (row/column blocks
@@ -99,25 +105,39 @@ def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
     "compensated" (two-float error-carrying sum — a two-float VMEM
     accumulator inside the Pallas body).  ``finalize=False`` returns the
     raw accumulator state for a cross-chip psum (`streaming.mesh_reduce`).
+
+    ``precision`` picks the Gram-contraction mode on both backends
+    (`repro.core.precision`: "fp32" | "bf16x2" | "bf16x3").  ``None``
+    resolves from the autotune plan when the tiling is being resolved
+    anyway (tile/bm/bn None) and to the historical "fp32" when the caller
+    pinned the tiling explicitly — an explicit-tile call stays bit-equal
+    to pre-precision code.
     """
     if resolve(backend) == "pallas":
         from repro.kernels.gram import ops as gram_ops
         if "bm" not in kw or "bn" not in kw:
             plan = resolve_plan("gram", x.shape[0], y.shape[0], x.shape[1],
                                 dtype=x.dtype, backend="pallas",
-                                accumulator=accumulator)
+                                accumulator=accumulator, precision=precision)
             kw.setdefault("bm", plan.bm)
             kw.setdefault("bn", plan.bn)
+            if precision is None:
+                precision = plan.precision
         return gram_ops.gram_matrix(kernel, x, y, w, interpret=interpret,
                                     accumulator=accumulator,
-                                    finalize=finalize, **kw)
+                                    finalize=finalize,
+                                    precision=precision or "fp32", **kw)
     from repro.core import nystrom
     if tile is None:
-        tile = resolve_tile("gram", x.shape[0], y.shape[0], x.shape[1],
+        plan = resolve_plan("gram", x.shape[0], y.shape[0], x.shape[1],
                             dtype=x.dtype, backend="xla",
-                            accumulator=accumulator)
+                            accumulator=accumulator, precision=precision)
+        tile = plan.tile
+        if precision is None:
+            precision = plan.precision
     return nystrom.scan_normal_eq(kernel, x, y, w, tile=tile,
-                                  accumulator=accumulator, finalize=finalize)
+                                  accumulator=accumulator, finalize=finalize,
+                                  precision=precision or "fp32")
 
 
 def binned_scatter(data: Array, lo: Array, spacing: Array, grid_size: int,

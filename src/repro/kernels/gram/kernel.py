@@ -47,6 +47,7 @@ Array = jax.Array
 # Shared with the core streaming solve: rows parked here are ~1e6 away from
 # any real data, so all supported kernel maps underflow to exactly 0.0.
 from repro.core.kernels import ROW_SENTINEL, exact_sq_dists  # noqa: E402,F401
+from repro.core import precision as precision_mod
 
 
 def _kernel_tile(x, y, *, kind: str, nu: float, a: float,
@@ -94,7 +95,7 @@ def _two_sum_store(hi_ref, lo_ref, update):
 
 def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *refs, kind: str,
                nu: float, a: float, inv_two_sigma_sq: float, exact_d: int,
-               compensated: bool):
+               compensated: bool, precision: str):
     gl_ref, rl_ref = refs if compensated else (None, None)
     k = pl.program_id(1)
     i = pl.program_id(2)
@@ -117,13 +118,21 @@ def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *refs, kind: str,
         if compensated:
             gl_ref[...] = jnp.zeros_like(gl_ref)
 
-    g_up = jax.lax.dot_general(           # rank-bm MXU update of G[j, k]
-        kj, kk, (((0,), (0,)), ((), ())), preferred_element_type=acc
-    ).astype(g_ref.dtype)
+    # Rank-bm update of G[j, k].  fp32 mode is the historical single MXU
+    # dot; the bf16 modes decompose the KERNEL-VALUE tiles (never the
+    # coordinates — distances keep the exact_d path above) into bf16 words
+    # and run the cross products as full-rate bf16 matmuls.  Partials
+    # arrive smallest-magnitude-first; in compensated mode EACH partial is
+    # folded through its own TwoSum so the combination error lands in the
+    # lo block (error-compensated partial combination).
+    g_parts = precision_mod.split_dot_partials(
+        kj, kk, (((0,), (0,)), ((), ())), precision, acc)
     if compensated:
-        _two_sum_store(g_ref, gl_ref, g_up)
+        for p in g_parts:
+            _two_sum_store(g_ref, gl_ref, p.astype(g_ref.dtype))
     else:
-        g_ref[...] += g_up
+        for p in g_parts:
+            g_ref[...] += p.astype(g_ref.dtype)
 
     @pl.when(jnp.logical_and(i == 0, k == 0))
     def _():
@@ -133,7 +142,9 @@ def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *refs, kind: str,
 
     @pl.when(j == k)
     def _():
-        w = w_ref[...].astype(acc)     # (bm, 1)
+        # rhs is a skinny (bm, cols) gemv-shaped product: bandwidth-bound,
+        # so it stays a plain fp32 dot under every precision mode.
+        w = w_ref[...].astype(acc)     # (bm, cols)
         r_up = jax.lax.dot_general(
             kj, w, (((0,), (0,)), ((), ())),
             preferred_element_type=acc,
@@ -147,7 +158,7 @@ def _gram_body(x_ref, yj_ref, yk_ref, w_ref, g_ref, r_ref, *refs, kind: str,
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "nu", "a", "sigma", "bm", "bn", "out_dtype",
-                     "interpret", "exact_d", "compensated"),
+                     "interpret", "exact_d", "compensated", "precision"),
 )
 def gram_padded(
     x: Array,
@@ -164,6 +175,7 @@ def gram_padded(
     interpret: bool = False,
     exact_d: int = 0,
     compensated: bool = False,
+    precision: str = "fp32",
 ) -> tuple[Array, ...]:
     """Core pallas_call; requires n % bm == 0 and m % bn == 0 (see ops.py).
 
@@ -174,6 +186,7 @@ def gram_padded(
     """
     n, d = x.shape
     m, _ = y.shape
+    cols = w.shape[1]     # response columns (fused multi-rhs rides along)
     assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
     grid = (m // bn, m // bn, n // bm)
     body = functools.partial(
@@ -184,23 +197,24 @@ def gram_padded(
         inv_two_sigma_sq=1.0 / (2.0 * float(sigma) ** 2),
         exact_d=int(exact_d),
         compensated=compensated,
+        precision=precision_mod.check(precision),
     )
     out_specs = [
         pl.BlockSpec((bn, bn), lambda j, k, i: (j, k)),      # G block
-        pl.BlockSpec((bn, 1), lambda j, k, i: (j, 0)),       # rhs block
+        pl.BlockSpec((bn, cols), lambda j, k, i: (j, 0)),    # rhs block
     ]
     out_shape = [
         jax.ShapeDtypeStruct((m, m), out_dtype),
-        jax.ShapeDtypeStruct((m, 1), out_dtype),
+        jax.ShapeDtypeStruct((m, cols), out_dtype),
     ]
     if compensated:
         out_specs = out_specs + [
             pl.BlockSpec((bn, bn), lambda j, k, i: (j, k)),  # G_lo block
-            pl.BlockSpec((bn, 1), lambda j, k, i: (j, 0)),   # rhs_lo block
+            pl.BlockSpec((bn, cols), lambda j, k, i: (j, 0)),  # rhs_lo block
         ]
         out_shape = out_shape + [
             jax.ShapeDtypeStruct((m, m), out_dtype),
-            jax.ShapeDtypeStruct((m, 1), out_dtype),
+            jax.ShapeDtypeStruct((m, cols), out_dtype),
         ]
     return pl.pallas_call(
         body,
@@ -209,7 +223,7 @@ def gram_padded(
             pl.BlockSpec((bm, d), lambda j, k, i: (i, 0)),   # row tile
             pl.BlockSpec((bn, d), lambda j, k, i: (j, 0)),   # landmarks j
             pl.BlockSpec((bn, d), lambda j, k, i: (k, 0)),   # landmarks k
-            pl.BlockSpec((bm, 1), lambda j, k, i: (i, 0)),   # responses
+            pl.BlockSpec((bm, cols), lambda j, k, i: (i, 0)),  # responses
         ],
         out_specs=out_specs,
         out_shape=out_shape,

@@ -32,7 +32,8 @@ def _pad(x: Array, rows: int, cols: int) -> Array:
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "nu", "a", "sigma", "bm", "bn", "out_dtype",
-                     "interpret", "use_pallas", "accumulator", "finalize"),
+                     "interpret", "use_pallas", "accumulator", "finalize",
+                     "precision"),
 )
 def gram(
     x: Array,
@@ -50,8 +51,12 @@ def gram(
     use_pallas: bool = True,
     accumulator: str = "plain",
     finalize: bool = True,
+    precision: str = "fp32",
 ) -> tuple:
-    """(n, d), (m, d), (n,) -> (K_nm^T K_nm (m, m), K_nm^T w (m,)).
+    """(n, d), (m, d), (n,) or (n, k) -> (K_nm^T K_nm (m, m), K_nm^T w).
+
+    rhs matches w: (m,) for a 1-D w, (m, k) for a multi-column w (fused
+    score-moment passes stack extra responses as columns).
 
     K_nm is never materialized: the Pallas kernel streams (bm, bn) tiles
     through VMEM and MXU-accumulates the Gram in one pass.  use_pallas=False
@@ -65,11 +70,18 @@ def gram(
     state — plain: (g, r); compensated: ((g, r), (g_lo, r_lo)) — the form
     `streaming.mesh_reduce` psums across chips; otherwise the pair is
     collapsed to (g + g_lo, r + r_lo).
+
+    ``precision`` picks the G-contraction mode (`repro.core.precision`):
+    "fp32" is the historical MXU dot; "bf16x2"/"bf16x3" split the kernel
+    tiles into bf16 words and fold the partial matmuls error-compensated
+    into the accumulator.  Distances always keep the exact_d path — only
+    the kernel VALUES are ever split.
     """
     from repro.core import streaming
 
     acc = streaming.get(accumulator)
     compensated = acc.name == "compensated"
+    squeeze = w.ndim == 1
     if out_dtype is None:
         out_dtype = jnp.promote_types(x.dtype, jnp.float32)
     if not use_pallas:
@@ -87,21 +99,27 @@ def gram(
     bn_ = min(bn, round_up(m, 128 if not interpret else 8))
     np_, mp = round_up(n, bm_), round_up(m, bn_)
     dp = round_up(d, 128) if not interpret else d
+    w2 = w.astype(out_dtype)
+    w2 = w2[:, None] if squeeze else w2
     out = gk.gram_padded(
         _pad(x, np_, dp),
         jnp.pad(y, ((0, mp - m), (0, dp - d))),
-        jnp.pad(w.astype(out_dtype)[:, None], ((0, np_ - n), (0, 0))),
+        jnp.pad(w2, ((0, np_ - n), (0, 0))),
         kind=kind, nu=nu, a=a, sigma=sigma, bm=bm_, bn=bn_,
         out_dtype=out_dtype, interpret=interpret,
         exact_d=d if d <= EXACT_DIST_D else 0,
-        compensated=compensated,
+        compensated=compensated, precision=precision,
     )
+
+    def _r(r):
+        return r[:m, 0] if squeeze else r[:m, :]
+
     if compensated:
         g, r, gl, rl = out
-        state = ((g[:m, :m], r[:m, 0]), (gl[:m, :m], rl[:m, 0]))
+        state = ((g[:m, :m], _r(r)), (gl[:m, :m], _r(rl)))
     else:
         g, r = out
-        state = (g[:m, :m], r[:m, 0])
+        state = (g[:m, :m], _r(r))
     return acc.finalize(state) if finalize else state
 
 

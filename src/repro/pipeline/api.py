@@ -105,6 +105,13 @@ class PipelineConfig:
     # historical fp32 running sum, "compensated" the two-float (Kahan)
     # error-carrying sum — lower Gram noise floor, ~2 extra adds per tile
     accumulator: str = "plain"        # plain | compensated
+    # Gram-contraction precision mode (repro.core.precision): "fp32" is the
+    # historical dot, "bf16x2"/"bf16x3" split the kernel tiles into bf16
+    # words (MXU-rate partial matmuls, error-compensated combine).  None
+    # autotunes the (tile, precision) pair jointly when the tile is also
+    # None, and means "fp32" when the tile is pinned (bit parity) — see
+    # pipeline/README.md "Precision modes".
+    precision: str | None = None      # None | fp32 | bf16x2 | bf16x3
     seed: int = 0
 
     def build_kernel(self) -> kernels.Kernel:
@@ -228,9 +235,28 @@ class SAKRRPipeline:
         """
         ctx = self._make_context(x, y, x_eval=x_eval, y_eval=y_eval,
                                  f_star=f_star)
-        self._run(self._completed_eval_stages(), ctx)
+        eval_stages = self._completed_eval_stages()
+        ctx.fuse_scoring = self._can_fuse(eval_stages, x_eval, y_eval)
+        self._run(eval_stages, ctx)
         self._snapshot(ctx)
         return dict(ctx.scores or {})
+
+    @staticmethod
+    def _can_fuse(stage_list: Sequence[stages_mod.Stage],
+                  x_eval: Array | None, y_eval: Array | None) -> bool:
+        """Fused in-sample scoring is only valid when every eval input is
+        the paper's default (predict at x, score against y/f_star): any
+        caller- or stage-level eval override falls back to the explicit
+        predict-then-score fold."""
+        if x_eval is not None or y_eval is not None:
+            return False
+        for s in stage_list:
+            if getattr(s, "x_eval", None) is not None:
+                return False
+            if isinstance(s, stages_mod.ScoreStage) and (
+                    s.y_eval is not None or s.f_star is not None):
+                return False
+        return True
 
     def _completed_eval_stages(self) -> list[stages_mod.Stage]:
         """self.stages COMPLETED to a scoring fold (Predict/Score appended
@@ -244,7 +270,8 @@ class SAKRRPipeline:
                        if isinstance(s, stages_mod.ScoreStage)),
                       len(eval_stages))
             eval_stages.insert(at, stages_mod.PredictStage(
-                backend=self._predict_backend(), tile=self._predict_tile()))
+                backend=self._predict_backend(), tile=self._predict_tile(),
+                precision=self._solve_precision()))
         if not any(isinstance(s, stages_mod.ScoreStage) for s in eval_stages):
             eval_stages.append(stages_mod.ScoreStage())
         return eval_stages
@@ -270,16 +297,19 @@ class SAKRRPipeline:
         ctx = self._make_context(x, y, x_eval=x_eval, y_eval=y_eval,
                                  f_star=f_star)
         cal_stages = self._completed_eval_stages()
+        ctx.fuse_scoring = self._can_fuse(cal_stages, x_eval, y_eval)
         if not any(isinstance(s, stages_mod.CalibrateStage)
                    for s in cal_stages):
             # mirror ALL of the SolveStage's per-stage overrides (backend,
-            # tile, weighted, accumulator) so every candidate is scored
-            # under the same solve configuration the winning refit will use
+            # tile, weighted, accumulator, precision) so every candidate is
+            # scored under the same solve configuration the winning refit
+            # will use
             solve = self._solve_stage()
             cal_stages.insert(0, stages_mod.CalibrateStage(
                 backend=self._predict_backend(), tile=self._predict_tile(),
                 weighted=solve.weighted if solve is not None else False,
-                accumulator=solve.accumulator if solve is not None else None))
+                accumulator=solve.accumulator if solve is not None else None,
+                precision=self._solve_precision()))
         self._run(cal_stages, ctx)
         self._snapshot(ctx)
         return dict(ctx.cv_best or {}, cv_scores=ctx.cv_scores,
@@ -306,6 +336,12 @@ class SAKRRPipeline:
         return (solve.tile if solve is not None and solve.tile is not None
                 else self.config.tile)
 
+    def _solve_precision(self) -> str | None:
+        solve = self._solve_stage()
+        return (solve.precision if solve is not None and
+                solve.precision is not None
+                else getattr(self.config, "precision", None))
+
     def predict(self, x_new: Array, tile: int | None = None) -> Array:
         st = self._fitted_state()
         if st.fit is None:
@@ -317,7 +353,7 @@ class SAKRRPipeline:
         ctx.scores = None   # any earlier scores described the old predictions
         stage = stages_mod.PredictStage(
             x_eval=x_new, backend=self._predict_backend(),
-            tile=self._predict_tile(tile))
+            tile=self._predict_tile(tile), precision=self._solve_precision())
         self._run([stage], ctx)
         self._snapshot(ctx)
         return ctx.predictions

@@ -36,6 +36,7 @@ from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import kde, kernels, leverage, nystrom, sampling
 
@@ -74,6 +75,15 @@ class StageContext:
     f_star: Optional[Array] = None          # noiseless truth at x_eval
     predictions: Optional[Array] = None
     scores: Optional[dict[str, float]] = None
+    # fused in-sample scoring (SAKRRPipeline.evaluate/calibrate set
+    # fuse_scoring): SolveStage banks the score moments (G, K_nm^T t, t^T t)
+    # in the SAME row stream that builds the normal equations, PredictStage
+    # skips its pass, and ScoreStage assembles mse/risk from the moments —
+    # evaluate() then streams x at most twice (deposit + Gram) instead of
+    # three times.  Raw `run_stages` folds keep the historical
+    # predict-then-score path (fuse_scoring defaults False).
+    fuse_scoring: bool = False
+    score_moments: Optional[dict] = None
     seconds: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def require(self, *names: str) -> None:
@@ -148,8 +158,8 @@ class DensityStage(Stage):
         method = _resolve_kde_method(self.method or cfg.kde_method, ctx.d)
         grid_size = (self.grid_size or cfg.kde_grid_size
                      or kde.default_grid_size(ctx.d))
-        backend, tile, accumulator = resolve_exec(self, cfg,
-                                                  tile_attr="kde_tile")
+        backend, tile, accumulator, _ = resolve_exec(self, cfg,
+                                                     tile_attr="kde_tile")
         # bandwidth resolution: stage override > calibrated ctx.bandwidth >
         # config > Scott's rule (the pre-calibration default)
         h = self.h if self.h is not None else ctx.bandwidth
@@ -261,44 +271,75 @@ class SolveStage(Stage):
     ``accumulator`` ("plain" | "compensated", default from the config)
     picks the `repro.core.streaming` Gram-accumulation strategy; the
     compensated two-float sum also lowers the solve's spectral truncation
-    floor (`nystrom.solve_normal_eq(eps_scale=...)`)."""
+    floor (`nystrom.solve_normal_eq(eps_scale=...)`).  ``precision``
+    ("fp32" | "bf16x2" | "bf16x3" | None, default from the config) picks
+    the Gram-contraction mode (`repro.core.precision`).
+
+    Under ``ctx.fuse_scoring`` with in-sample evaluation inputs, the stage
+    runs `nystrom.fit_streaming_scored` instead: the score targets ride the
+    rhs of the SAME Gram stream and the quadratic-form moments land on
+    ``ctx.score_moments`` — PredictStage/ScoreStage then finish the fold
+    without re-streaming x."""
 
     name = "solve"
     requires = ("landmark_idx",)
     provides = ("fit",)
 
     def __init__(self, *, backend: str | None = None, tile: int | None = None,
-                 weighted: bool = False, accumulator: str | None = None):
+                 weighted: bool = False, accumulator: str | None = None,
+                 precision: str | None = None):
         self.backend = backend
         self.tile = tile
         self.weighted = weighted
         self.accumulator = accumulator
+        self.precision = precision
+
+    @staticmethod
+    def _fuse(ctx: StageContext) -> bool:
+        return (ctx.fuse_scoring and ctx.x_eval is None
+                and ctx.y_eval is None
+                and (ctx.f_star is None or ctx.f_star.shape[0] == ctx.n))
 
     def run(self, ctx: StageContext) -> None:
         cfg = ctx.config
         weights = ctx.sample_weights if self.weighted else None
-        backend, tile, accumulator = resolve_exec(self, cfg)
+        backend, tile, accumulator, precision = resolve_exec(self, cfg)
+        if self._fuse(ctx):
+            ctx.fit, ctx.score_moments = nystrom.fit_streaming_scored(
+                ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
+                f_star=ctx.f_star, tile=tile, backend=backend,
+                jitter=cfg.jitter, weights=weights, accumulator=accumulator,
+                precision=precision)
+            return
         ctx.fit = nystrom.fit_streaming(
             ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
             tile=tile, backend=backend, jitter=cfg.jitter, weights=weights,
-            accumulator=accumulator)
+            accumulator=accumulator, precision=precision)
 
 
 class PredictStage(Stage):
     """Batched predictions at `x_eval` (default: in-sample, ctx.x) through
     `nystrom.predict_streaming` — O(tile * m) per batch, row-sharded under
-    an active mesh exactly like the solve.  backend/tile overrides follow
-    the SolveStage convention (stage constructor beats config)."""
+    an active mesh exactly like the solve.  backend/tile/precision overrides
+    follow the SolveStage convention (stage constructor beats config).
+
+    When the fold fused its scoring (SolveStage banked ``ctx.score_moments``
+    for the in-sample setting), there is nothing left to predict: the stage
+    records its (near-zero) seconds and leaves ``ctx.predictions`` None —
+    ScoreStage assembles the metrics from the moments instead.  Explicit
+    eval points always run the real pass and invalidate the moments."""
 
     name = "predict"
     requires = ("fit",)
     provides = ("predictions",)
 
     def __init__(self, *, x_eval: Array | None = None,
-                 backend: str | None = None, tile: int | None = None):
+                 backend: str | None = None, tile: int | None = None,
+                 precision: str | None = None):
         self.x_eval = x_eval
         self.backend = backend
         self.tile = tile
+        self.precision = precision
 
     def run(self, ctx: StageContext) -> None:
         cfg = ctx.config
@@ -306,13 +347,17 @@ class PredictStage(Stage):
             ctx.x_eval = jnp.asarray(self.x_eval)
         if ctx.x_eval is None:
             ctx.x_eval = ctx.x                       # the paper's R_n setting
-        backend, tile, _ = resolve_exec(self, cfg)
+            if ctx.score_moments is not None:        # fused in-sample scoring
+                return
+        ctx.score_moments = None   # real predictions supersede the moments
+        backend, tile, _, precision = resolve_exec(self, cfg)
         ctx.predictions = nystrom.predict_streaming(
-            ctx.kernel, ctx.fit, ctx.x_eval, tile=tile, backend=backend)
+            ctx.kernel, ctx.fit, ctx.x_eval, tile=tile, backend=backend,
+            precision=precision)
 
 
 class ScoreStage(Stage):
-    """Scalar quality metrics from the predictions.
+    """Scalar quality metrics from the predictions (or the fused moments).
 
     Emits a dict on `ctx.scores`:
 
@@ -321,12 +366,18 @@ class ScoreStage(Stage):
       * ``risk``            — the paper's R_n functional, against the
         noiseless ``f_star`` when the workload knows it (synthetic data).
 
+    When the fold fused its scoring (``ctx.score_moments`` from
+    SolveStage, no predictions), the metrics come from the quadratic-form
+    identity  sum (f - t)^2 = beta^T G beta - 2 beta^T (K_nm^T t) + t^T t
+    assembled in host f64 — the two big terms cancel to ~n·mse, so f64
+    keeps the score accurate where f32 assembly would lose it.
+
     Values are host floats (the stage blocks on them, so its recorded
     seconds include the device work it triggered).
     """
 
     name = "score"
-    requires = ("predictions",)
+    requires = ()     # predictions OR score_moments; checked in run()
     provides = ("scores",)
 
     def __init__(self, *, f_star: Array | None = None,
@@ -334,11 +385,39 @@ class ScoreStage(Stage):
         self.f_star = f_star
         self.y_eval = y_eval
 
+    @staticmethod
+    def _scores_from_moments(ctx: StageContext) -> dict[str, float]:
+        mom = ctx.score_moments
+        beta = np.asarray(ctx.fit.beta, np.float64)
+        q = beta @ np.asarray(mom["g"], np.float64) @ beta
+        n_eval = mom["n_eval"]
+        mse = max(0.0, float(
+            (q - 2.0 * (beta @ np.asarray(mom["rhs_y"], np.float64))
+             + mom["y_sq"]) / n_eval))
+        scores = {"mse": mse, "rmse": mse ** 0.5}
+        if mom.get("rhs_f") is not None:
+            scores["risk"] = max(0.0, float(
+                (q - 2.0 * (beta @ np.asarray(mom["rhs_f"], np.float64))
+                 + mom["f_sq"]) / n_eval))
+        return scores
+
     def run(self, ctx: StageContext) -> None:
         if self.y_eval is not None:
             ctx.y_eval = jnp.asarray(self.y_eval)
         if self.f_star is not None:
             ctx.f_star = jnp.asarray(self.f_star)
+        if ctx.predictions is None:
+            # stage-level targets describe a predict pass the fused fold
+            # never ran — they cannot be scored from the moments
+            if (ctx.score_moments is not None and self.y_eval is None
+                    and self.f_star is None):
+                if ctx.y_eval is None and ctx.x_eval is ctx.x:
+                    ctx.y_eval = ctx.y               # in-sample default
+                ctx.scores = self._scores_from_moments(ctx)
+                return
+            raise StageError(
+                "missing artifacts ['predictions']; run the providing "
+                "stage(s) first (e.g. PredictStage before ScoreStage)")
         if ctx.y_eval is None and ctx.x_eval is ctx.x:
             ctx.y_eval = ctx.y                       # in-sample default
         if ctx.y_eval is None and ctx.f_star is None:
@@ -381,8 +460,10 @@ class CalibrateStage(Stage):
         gather re-run per h (`kde.kde_binned_multi`;
         `core.distributed.kde_binned_sharded_multi` under an active mesh —
         one deposit AND one grid psum for the whole sweep);
-      * validation predictions share the kernel tiles across lam
-        (`nystrom.predict_streaming_multi`).
+      * validation scoring shares ONE x_val stream across the WHOLE
+        (h, lam) grid (`nystrom.val_mse_streaming_multi` — a fused
+        `streaming.multi_reduce` scan with one squared-error accumulator
+        slot per bandwidth), recorded as ``seconds["calibrate[val]"]``.
 
     So an H x L sweep costs ~H fits + one KDE instead of H·L of each.  The
     fold: a deterministic holdout split (``val_fraction``, seeded by the
@@ -407,7 +488,8 @@ class CalibrateStage(Stage):
                  h_grid: Sequence[float] | None = None,
                  val_fraction: float | None = None,
                  backend: str | None = None, tile: int | None = None,
-                 weighted: bool = False, accumulator: str | None = None):
+                 weighted: bool = False, accumulator: str | None = None,
+                 precision: str | None = None):
         self.lam_grid = lam_grid
         self.h_grid = h_grid
         self.val_fraction = val_fraction
@@ -415,6 +497,7 @@ class CalibrateStage(Stage):
         self.tile = tile
         self.weighted = weighted
         self.accumulator = accumulator
+        self.precision = precision
 
     # ------------------------------------------------------------ helpers --
     def _grids(self, ctx: StageContext) -> tuple[list[float], list[float]]:
@@ -463,9 +546,9 @@ class CalibrateStage(Stage):
         if method != "binned":
             return jnp.stack([kde.kde_direct(x_tr, x_tr, h) for h in h_grid])
         grid_size = cfg.kde_grid_size or kde.default_grid_size(ctx.d)
-        backend, tile, accumulator = resolve_exec(self, cfg,
-                                                  tile_attr="kde_tile",
-                                                  stage_tile=False)
+        backend, tile, accumulator, _ = resolve_exec(self, cfg,
+                                                     tile_attr="kde_tile",
+                                                     stage_tile=False)
         h_max = jnp.asarray(max(h_grid), x_tr.dtype)
         lo, hi = kde.binned_bounds(x_tr, x_tr, h_max)
         if shd.active() is not None:
@@ -485,7 +568,7 @@ class CalibrateStage(Stage):
         x_tr, y_tr = ctx.x[tr_idx], ctx.y[tr_idx]
         x_val, y_val = ctx.x[val_idx], ctx.y[val_idx]
         n_tr = int(x_tr.shape[0])
-        backend, tile, accumulator = resolve_exec(self, cfg)
+        backend, tile, accumulator, precision = resolve_exec(self, cfg)
 
         t0 = time.perf_counter()
         dens = self._densities_multi(ctx, x_tr, h_grid)
@@ -499,7 +582,9 @@ class CalibrateStage(Stage):
         # re-derived from the key inside every per-h call)
         race_dtype = jnp.promote_types(ctx.x.dtype, jnp.float32)
         race = jax.random.gumbel(key, (n_tr,), dtype=race_dtype)
-        records: list[dict] = []
+        fits_by_h: list[list] = []
+        fit_seconds: list[float] = []
+        h_seconds: list[float] = []
         for i, h in enumerate(h_grid):
             t_h = time.perf_counter()
             lev = leverage.sa_leverage(
@@ -520,24 +605,35 @@ class CalibrateStage(Stage):
                 ctx.kernel, x_tr, y_tr, lam_grid, idx,
                 tile=tile, backend=backend, jitter=cfg.jitter,
                 weights=weights if self.weighted else None,
-                accumulator=accumulator)
+                accumulator=accumulator, precision=precision)
             jax.block_until_ready(fits[0].beta)
             fit_s = time.perf_counter() - t1
-            preds = nystrom.predict_streaming_multi(ctx.kernel, fits, x_val,
-                                                    tile=tile,
-                                                    backend=backend)
-            val_mse = jnp.mean((preds - y_val[None, :]) ** 2, axis=1)
-            val_mse = [float(v) for v in val_mse]
             h_s = time.perf_counter() - t_h
             sec_key = f"calibrate[h={h:.3g}]"
             if sec_key in ctx.seconds:   # grid values equal at 3 sig figs
                 sec_key = f"calibrate[h={h:.3g}#{i}]"
             ctx.seconds[sec_key] = h_s
-            for lam, mse in zip(lam_grid, val_mse):
+            fits_by_h.append(fits)
+            fit_seconds.append(fit_s)
+            h_seconds.append(h_s)
+        # validation: ONE fused x_val stream scores every (h, lam) candidate
+        # (`nystrom.val_mse_streaming_multi` — slot h applies its own
+        # landmarks/betas per tile) instead of H predict passes
+        t_val = time.perf_counter()
+        val_mse_hl = nystrom.val_mse_streaming_multi(
+            [ctx.kernel] * len(h_grid), fits_by_h, x_val, y_val,
+            tile=tile, backend=backend, precision=precision)
+        val_mse_hl = np.asarray(jax.block_until_ready(val_mse_hl))
+        ctx.seconds["calibrate[val]"] = time.perf_counter() - t_val
+        records: list[dict] = []
+        for i, h in enumerate(h_grid):
+            for j, lam in enumerate(lam_grid):
+                mse = float(val_mse_hl[i, j])
                 records.append({
                     "h": float(h), "lam": float(lam), "val_mse": mse,
-                    "val_rmse": mse ** 0.5, "fit_seconds": round(fit_s, 4),
-                    "h_block_seconds": round(h_s, 4), "best": False})
+                    "val_rmse": mse ** 0.5,
+                    "fit_seconds": round(fit_seconds[i], 4),
+                    "h_block_seconds": round(h_seconds[i], 4), "best": False})
         ctx.seconds["calibrate[kde]"] = kde_s
 
         # non-finite val_mse (a diverged candidate) must never win min():
@@ -554,6 +650,7 @@ class CalibrateStage(Stage):
         ctx.bandwidth = best["h"]
         ctx.densities = ctx.leverage = ctx.landmark_idx = None
         ctx.sample_weights = ctx.fit = ctx.predictions = ctx.scores = None
+        ctx.score_moments = None
 
 
 def default_stages(config: Any = None) -> list[Stage]:
@@ -591,8 +688,9 @@ def resolve_accumulator(cfg: Any) -> str:
 
 
 def resolve_exec(stage: Any, cfg: Any, *, tile_attr: str = "tile",
-                 stage_tile: bool = True) -> tuple[str | None, int | None, str]:
-    """Per-stage execution knobs: (backend, tile, accumulator).
+                 stage_tile: bool = True
+                 ) -> tuple[str | None, int | None, str, str | None]:
+    """Per-stage execution knobs: (backend, tile, accumulator, precision).
 
     One resolver for every stage's precedence chain — stage constructor
     override beats the pipeline-wide config default.  ``tile_attr`` names
@@ -601,7 +699,11 @@ def resolve_exec(stage: Any, cfg: Any, *, tile_attr: str = "tile",
     ``stage_tile=False`` ignores the stage's own tile attribute
     (CalibrateStage's shared deposit reads the config's kde_tile, not the
     stage's Gram tile).  A resolved tile of None means autotune
-    (`repro.tuning` through `kernels.dispatch.resolve_plan`).
+    (`repro.tuning` through `kernels.dispatch.resolve_plan`); a resolved
+    precision of None means the Gram stream picks its (tile, precision)
+    pair jointly from the autotune plan — or the historical "fp32" when
+    the tile is pinned (`nystrom._resolve_gram_exec`).  Stages without a
+    Gram contraction (KDE deposit) ignore the precision slot.
     """
     backend = getattr(stage, "backend", None)
     if backend is None:
@@ -611,4 +713,7 @@ def resolve_exec(stage: Any, cfg: Any, *, tile_attr: str = "tile",
         tile = getattr(cfg, tile_attr, None)
     accumulator = (getattr(stage, "accumulator", None)
                    or resolve_accumulator(cfg))
-    return backend, tile, accumulator
+    precision = getattr(stage, "precision", None)
+    if precision is None:
+        precision = getattr(cfg, "precision", None)
+    return backend, tile, accumulator, precision

@@ -49,6 +49,36 @@ class DeviceSpec:
     step_overhead: float    # seconds of fixed cost per streamed tile
     cache_bytes: float      # fast-memory working-set budget
 
+    def matmul_cost(self, precision: str = "fp32") -> float:
+        """Relative time per NOMINAL matmul flop under a precision mode.
+
+        The split-precision Gram contraction (`repro.core.precision`)
+        replaces one fp32 syrk by 3 (bf16x2) or 6 (bf16x3) bf16 partial
+        matmuls.  Whether that wins depends on the device's bf16:f32
+        matmul-rate ratio, so the autotuner's roofline scales the matmul
+        share of its flop count by this factor (MATMUL_COST): on an MXU
+        (bf16 at 2x the f32 rate, plus fp32 inputs skipping the
+        multi-pass f32 emulation) the split modes come out BELOW 1; on
+        CPU/GPU-f32 the extra partial matmuls are a plain multiplier
+        ABOVE 1 — which steers joint (tile, precision) resolution to
+        fp32 there.
+        """
+        return MATMUL_COST.get(self.name, MATMUL_COST["cpu"]).get(
+            precision, 1.0)
+
+
+# Relative per-nominal-flop matmul cost by (device, precision); see
+# DeviceSpec.matmul_cost.  TPU: bf16 MXU runs 2x the f32 rate, so bf16x2's
+# 3 partials cost ~0.75 of fp32 with operand-reuse headroom (0.375 each
+# relative flop) and bf16x3's 6 partials ~0.75 net of the skipped f32
+# multi-passing.  CPU: no bf16 execution units — each partial is an f32
+# GEMM plus split overhead, so the modes are ~words^2-ish slowdowns.
+MATMUL_COST = {
+    "tpu": {"fp32": 1.0, "bf16x2": 0.375, "bf16x3": 0.75},
+    "gpu": {"fp32": 1.0, "bf16x2": 1.5, "bf16x3": 3.0},
+    "cpu": {"fp32": 1.0, "bf16x2": 3.2, "bf16x3": 6.4},
+}
+
 
 DEVICE_SPECS = {
     # v5e: f32 MXU rate is half the bf16 peak; VMEM ~128 MB but a slab
@@ -230,6 +260,27 @@ def cost_dict(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost or {}
+
+
+def achieved_throughput(cost: dict, seconds: float) -> dict:
+    """Achieved GFLOP/s + bytes-moved columns from a `cost_dict` result.
+
+    Divides the compiled program's counted flops / bytes by a MEASURED
+    wall-clock, giving the attribution columns bench_pipeline records next
+    to each stage's seconds: compute-bound stages show gflops_per_s near
+    the device ceiling, bandwidth-bound ones show gbytes_per_s near the
+    memory ceiling instead.  Zero/missing counters (backends without
+    cost_analysis) degrade to zeros, never raise.
+    """
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    moved = float(cost.get("bytes accessed", 0.0) or 0.0)
+    s = max(float(seconds), 1e-12)
+    return {
+        "gflops": flops / 1e9,
+        "gflops_per_s": flops / 1e9 / s,
+        "gbytes_moved": moved / 1e9,
+        "gbytes_per_s": moved / 1e9 / s,
+    }
 
 
 def analyze(arch: str, shape, cfg, mesh_name: str, chips: int,

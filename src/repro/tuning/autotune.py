@@ -44,16 +44,24 @@ import json
 import os
 import tempfile
 import time
+import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import PRECISIONS
 from repro.roofline.analysis import DeviceSpec, device_spec
 
 Array = jax.Array
 
 OPS = ("gram", "deposit", "predict")
+
+# The precision modes ``precision=None`` may resolve to JOINTLY with the
+# tile.  bf16x2 is excluded: it is faster still on MXU but raises the Gram
+# noise floor ~256x (precision.EPS_SCALE), so it must be an explicit
+# caller choice, never an autotuner surprise.
+AUTO_PRECISIONS = ("fp32", "bf16x3")
 
 DEFAULT_TILE = 8192      # the historical hardcoded pipeline default
 DEFAULT_BM = 256         # Pallas gram/deposit row block
@@ -64,7 +72,7 @@ MIN_TILE = 512           # smallest ladder rung (per-step overhead floor)
 MAX_TILE = 131072        # largest rung (slab memory ceiling at prod m)
 _SLAB_BYTES_CAP = 512e6  # hard sanity cap on tile * m * dtype_bytes
 
-_CACHE_VERSION = 1
+_CACHE_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +84,10 @@ class Plan:
     prior resolution — warm runs), "default" (fallback when resolution is
     impossible, e.g. n == 0).  ``tuning_seconds`` is the wall-clock this
     resolution spent measuring (0.0 for model/cache/default).
+    ``precision`` is the Gram-contraction mode the plan was resolved for —
+    either echoed back from the caller's pin, or (``precision=None``
+    requests on the gram op) the mode the roofline model / micro-benchmark
+    chose jointly with the tile.
     """
 
     op: str
@@ -84,6 +96,7 @@ class Plan:
     bn: int = DEFAULT_BN
     source: str = "default"
     tuning_seconds: float = 0.0
+    precision: str = "fp32"
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -146,19 +159,56 @@ def cache_path() -> str:
                         "autotune.json")
 
 
+def _entry_valid(v) -> bool:
+    """Shape-check one cache entry before trusting it (a truncated write or
+    concurrent editor can leave arbitrary JSON behind)."""
+    return (isinstance(v, dict)
+            and isinstance(v.get("tile"), int) and v["tile"] > 0
+            and v.get("source") in ("model", "measured"))
+
+
 def _load_disk() -> None:
     global _DISK_LOADED
     if _DISK_LOADED:
         return
     _DISK_LOADED = True
+    path = cache_path()
     try:
-        with open(cache_path()) as f:
+        with open(path) as f:
             payload = json.load(f)
-        if payload.get("version") == _CACHE_VERSION:
-            for k, v in payload.get("entries", {}).items():
-                _MEMORY.setdefault(k, v)
-    except (OSError, ValueError):
-        pass   # missing or corrupt cache == cold cache
+    except FileNotFoundError:
+        return                         # cold cache: the normal first run
+    except (OSError, ValueError) as e:  # ValueError covers JSONDecodeError
+        warnings.warn(
+            f"ignoring unreadable autotune plan cache at {path} ({e}); "
+            "plans will be re-tuned from scratch", RuntimeWarning,
+            stacklevel=2)
+        return
+    if not isinstance(payload, dict) or "version" not in payload:
+        warnings.warn(
+            f"autotune plan cache at {path} has no version key (corrupted "
+            "or concurrently rewritten); re-tuning from scratch",
+            RuntimeWarning, stacklevel=2)
+        return
+    if payload["version"] != _CACHE_VERSION:
+        return   # clean older/newer format: silently start cold
+    entries = payload.get("entries")
+    if not isinstance(entries, dict):
+        warnings.warn(
+            f"autotune plan cache at {path} has malformed entries; "
+            "re-tuning from scratch", RuntimeWarning, stacklevel=2)
+        return
+    bad = 0
+    for k, v in entries.items():
+        if _entry_valid(v):
+            _MEMORY.setdefault(k, v)
+        else:
+            bad += 1
+    if bad:
+        warnings.warn(
+            f"dropped {bad} malformed entr{'y' if bad == 1 else 'ies'} from "
+            f"the autotune plan cache at {path}; they will be re-tuned",
+            RuntimeWarning, stacklevel=2)
 
 
 def _save_disk() -> None:
@@ -217,63 +267,77 @@ def _bucket(v: int) -> int:
 
 def shape_key(op: str, n: int, m: int, d: int, *, dtype=jnp.float32,
               backend: str = "xla", accumulator: str = "plain",
+              precision: str = "fp32",
               device_kind: str | None = None) -> str:
     """Cache key: device kind + backend + op + dtype + bucketed shape.
 
     n and m are pow2-bucketed so e.g. n = 250k and n = 262144 resolve to
-    the same plan (the roofline is smooth in n); d and the accumulator are
-    exact (they change the per-step op mix).
+    the same plan (the roofline is smooth in n); d, the accumulator and
+    the precision REQUEST are exact (they change the per-step op mix).
+    A joint-resolution request keys as "auto" — the entry then carries the
+    chosen precision, separate from any explicitly-pinned entries.
     """
     if device_kind is None:
         device_kind = jax.devices()[0].device_kind
     dt = jnp.dtype(dtype).name
     return "/".join([device_kind.replace(" ", "_"), backend, op, dt,
                      f"n{_bucket(n)}", f"m{_bucket(m)}", f"d{int(d)}",
-                     accumulator])
+                     accumulator, f"px_{precision}"])
 
 
 # ------------------------------------------------------------------ model --
 
 def _step_costs(op: str, tile: int, m: int, d: int,
-                dtype_bytes: int) -> tuple[float, float]:
-    """(flops, working-set bytes) of ONE `tile`-row step of `op`.
+                dtype_bytes: int) -> tuple[float, float, float]:
+    """(matmul flops, other flops, working-set bytes) of ONE `tile`-row step.
 
     gram:    (tile, m) kernel slab build (~d+const flops/entry through the
-             augmented-GEMM distance) + the (m, m) syrk + (m,) gemv;
+             augmented-GEMM distance) + the (m, m) syrk + (m,) gemv — the
+             syrk is the PRECISION-SCALABLE matmul term (the bf16 split
+             runs it at the MXU bf16 rate x a words^2-ish partial count);
     predict: slab build + (tile, m) x (m,) gemv;
     deposit: O(2^d) stencil flops per point, no MXU term; the working set
              is the corner stream plus the resident (m,)^d grid.
     """
     if op == "gram":
-        flops = 2.0 * tile * m * (d + 2) + 12.0 * tile * m \
-            + 2.0 * tile * m * m + 2.0 * tile * m
+        mat = 2.0 * tile * m * m
+        rest = 2.0 * tile * m * (d + 2) + 12.0 * tile * m + 2.0 * tile * m
         ws = tile * (m + d) * dtype_bytes + 2 * m * m * dtype_bytes
     elif op == "predict":
-        flops = 2.0 * tile * m * (d + 2) + 12.0 * tile * m + 2.0 * tile * m
+        mat = 0.0
+        rest = 2.0 * tile * m * (d + 2) + 12.0 * tile * m + 2.0 * tile * m
         ws = tile * (m + d) * dtype_bytes
     elif op == "deposit":
         corners = 2 ** d
-        flops = 24.0 * tile * corners
+        mat = 0.0
+        rest = 24.0 * tile * corners
         ws = tile * (corners + d) * dtype_bytes \
             + min(float(m) ** d, 16e6) * dtype_bytes
     else:
         raise ValueError(f"unknown op {op!r}; pick from {OPS}")
-    return flops, float(ws)
+    return mat, rest, float(ws)
 
 
 def model_seconds(op: str, tile: int, n: int, m: int, d: int, *,
                   dtype_bytes: int = 4,
-                  spec: DeviceSpec | None = None) -> float:
+                  spec: DeviceSpec | None = None,
+                  precision: str = "fp32") -> float:
     """Analytic whole-stream seconds for one tile choice (ranking only).
 
     Per step: max(compute, memory) roofline + the fixed step overhead; a
     slab that outgrows `spec.cache_bytes` degrades the compute rate
     proportionally (GEMM panels start streaming from main memory — the
-    empirically dominant effect behind the 2x tile swing on CPU).
+    empirically dominant effect behind the 2x tile swing on CPU).  The
+    matmul share of the flops is scaled by the device's per-precision
+    compute ceiling (`DeviceSpec.matmul_cost`): < 1 where the bf16 split's
+    partial matmuls ride a faster MXU path, > 1 where bf16 emulation is a
+    slowdown (CPU) — which is how ``precision=None`` resolution picks fp32
+    on CPU and the split modes on MXU hardware.
     """
     spec = spec or device_spec()
     steps = max(1, -(-n // tile))
-    flops, ws = _step_costs(op, min(tile, n), m, d, dtype_bytes)
+    mat, rest, ws = _step_costs(op, min(tile, n), m, d, dtype_bytes)
+    flops = rest + mat * spec.matmul_cost(precision)
     spill = max(1.0, ws / spec.cache_bytes)
     t_compute = flops / spec.peak_flops * spill
     t_memory = ws / spec.mem_bw
@@ -282,7 +346,8 @@ def model_seconds(op: str, tile: int, n: int, m: int, d: int, *,
 
 def candidate_tiles(op: str, n: int, m: int, d: int, *,
                     dtype_bytes: int = 4,
-                    spec: DeviceSpec | None = None) -> list[int]:
+                    spec: DeviceSpec | None = None,
+                    precision: str = "fp32") -> list[int]:
     """Model-ranked pow2 tile ladder (best first), bounded by n and memory.
 
     The top rung is the pow2-ceil of n (a one-shot slab), so small-n calls
@@ -303,7 +368,7 @@ def candidate_tiles(op: str, n: int, m: int, d: int, *,
         ladder.append(MAX_TILE)
     ladder.sort(key=lambda c: model_seconds(op, c, n, m, d,
                                             dtype_bytes=dtype_bytes,
-                                            spec=spec))
+                                            spec=spec, precision=precision))
     return ladder
 
 
@@ -321,7 +386,7 @@ def _bench(fn: Callable[[], object], reps: int = 3) -> float:
 
 
 def _measure_tile(op: str, tile: int, n: int, m: int, d: int, dtype,
-                  accumulator: str) -> float:
+                  accumulator: str, precision: str = "fp32") -> float:
     """Whole-stream seconds for one candidate, extrapolated from a short
     synthetic stream (<= a few tiles of rows) — candidates are compared on
     identical data/step counts, so the extrapolation cancels out of the
@@ -346,7 +411,8 @@ def _measure_tile(op: str, tile: int, n: int, m: int, d: int, dtype,
         if op == "gram":
             w = jnp.ones((n_s,), dtype)
             fn = jax.jit(lambda: nystrom.scan_normal_eq(
-                kern, x, xm, w, tile=tile, accumulator=accumulator))
+                kern, x, xm, w, tile=tile, accumulator=accumulator,
+                precision=precision))
         else:
             beta = jnp.zeros((xm.shape[0],), dtype)
             fit = nystrom.NystromFit(beta=beta, landmarks=xm,
@@ -364,6 +430,7 @@ def _measure_tile(op: str, tile: int, n: int, m: int, d: int, dtype,
 
 def plan_for(op: str, n: int, m: int, d: int, *, dtype=jnp.float32,
              backend: str = "xla", accumulator: str = "plain",
+             precision: str | None = "fp32",
              measure: bool | None = None) -> Plan:
     """Resolve the execution plan for one streamed op at one shape.
 
@@ -373,15 +440,29 @@ def plan_for(op: str, n: int, m: int, d: int, *, dtype=jnp.float32,
     trace; Pallas plans only measure on a real TPU), the top
     `MEASURE_TOP_K` candidates are micro-benchmarked and the argmin wins.
     A measured entry permanently shadows a model entry for its bucket.
+
+    ``precision`` pins the Gram-contraction mode the plan is ranked for.
+    ``precision=None`` on the gram op resolves the (tile, precision) pair
+    JOINTLY over `AUTO_PRECISIONS`: the candidate set is the cross product
+    of the tile ladder with the eligible modes, ranked by the
+    per-precision roofline (and micro-benchmarked as pairs when
+    measurement is on).  Non-gram ops have no precision-scalable matmul
+    and always plan as "fp32".
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; pick from {OPS}")
+    if precision is not None and precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"pick from {PRECISIONS} or None")
+    if op != "gram":
+        precision = "fp32"
     n, m, d = int(n), int(m), int(d)
     if n <= 0 or m <= 0:
-        return Plan(op=op, tile=DEFAULT_TILE)
+        return Plan(op=op, tile=DEFAULT_TILE, precision=precision or "fp32")
     _load_disk()
     key = shape_key(op, n, m, d, dtype=dtype, backend=backend,
-                    accumulator=accumulator)
+                    accumulator=accumulator,
+                    precision=precision if precision is not None else "auto")
     want = (measuring() if measure is None else measure) and _can_measure()
     if backend == "pallas" and jax.default_backend() != "tpu":
         want = False   # interpret-mode timings are meaningless
@@ -389,19 +470,27 @@ def plan_for(op: str, n: int, m: int, d: int, *, dtype=jnp.float32,
     if entry is not None and (entry["source"] == "measured" or not want):
         return Plan(op=op, tile=int(entry["tile"]),
                     bm=int(entry.get("bm", DEFAULT_BM)),
-                    bn=int(entry.get("bn", DEFAULT_BN)), source="cache")
+                    bn=int(entry.get("bn", DEFAULT_BN)), source="cache",
+                    precision=str(entry.get("precision", "fp32")))
 
     dtype_bytes = jnp.dtype(dtype).itemsize
+    precs = AUTO_PRECISIONS if precision is None else (precision,)
     ladder = candidate_tiles(op, n, m, d, dtype_bytes=dtype_bytes)
-    tile, source, tuning_s = ladder[0], "model", 0.0
+    pairs = [(t, p) for p in precs for t in ladder]
+    pairs.sort(key=lambda tp: model_seconds(op, tp[0], n, m, d,
+                                            dtype_bytes=dtype_bytes,
+                                            precision=tp[1]))
+    (tile, prec), source, tuning_s = pairs[0], "model", 0.0
     if want:
         t0 = time.perf_counter()
-        timed = {c: _measure_tile(op, c, n, m, d, dtype, accumulator)
-                 for c in ladder[:MEASURE_TOP_K]}
-        tile = min(timed, key=timed.get)
+        timed = {tp: _measure_tile(op, tp[0], n, m, d, dtype, accumulator,
+                                   precision=tp[1])
+                 for tp in pairs[:MEASURE_TOP_K]}
+        tile, prec = min(timed, key=timed.get)
         source, tuning_s = "measured", time.perf_counter() - t0
-    plan = Plan(op=op, tile=tile, source=source, tuning_seconds=tuning_s)
+    plan = Plan(op=op, tile=tile, source=source, tuning_seconds=tuning_s,
+                precision=prec)
     _MEMORY[key] = {"tile": plan.tile, "bm": plan.bm, "bn": plan.bn,
-                    "source": source}
+                    "precision": plan.precision, "source": source}
     _save_disk()
     return plan

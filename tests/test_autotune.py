@@ -60,13 +60,42 @@ def test_cache_hit_and_disk_roundtrip(tune_cache):
     warm = tuning.plan_for("predict", 50000, 160, 3)
     assert warm.source == "cache" and warm.tile == cold.tile
     # the entry survives on disk and a cold in-memory cache recalls it
-    payload = json.loads(tune_cache.read_text())
-    assert payload["version"] == 1 and len(payload["entries"]) == 1
     from repro.tuning import autotune
+    payload = json.loads(tune_cache.read_text())
+    assert payload["version"] == autotune._CACHE_VERSION
+    assert len(payload["entries"]) == 1
     autotune._MEMORY.clear()
     autotune._DISK_LOADED = False
     again = tuning.plan_for("predict", 50000, 160, 3)
     assert again.source == "cache" and again.tile == cold.tile
+
+
+def test_corrupted_disk_cache_warns_and_retunes(tune_cache):
+    """Garbage bytes in autotune.json must never raise: plan resolution
+    warns once and re-tunes from scratch."""
+    from repro.tuning import autotune
+    tune_cache.write_bytes(b"\x00\x9f{not json at all\xff")
+    autotune._MEMORY.clear()
+    autotune._DISK_LOADED = False
+    with pytest.warns(RuntimeWarning, match="re-tuned from scratch"):
+        plan = tuning.plan_for("gram", 50000, 160, 3)
+    assert plan.tile > 0 and plan.source == "model"
+    # a valid-JSON payload with the wrong shape is equally survivable
+    tune_cache.write_text(json.dumps({"entries": []}))
+    autotune._MEMORY.clear()
+    autotune._DISK_LOADED = False
+    with pytest.warns(RuntimeWarning, match="no version key"):
+        plan = tuning.plan_for("gram", 50000, 160, 3)
+    assert plan.tile > 0
+    # and a version-matched payload with malformed entries drops only them
+    tune_cache.write_text(json.dumps({
+        "version": autotune._CACHE_VERSION,
+        "entries": {"k1": {"tile": "huge"}, "k2": 7}}))
+    autotune._MEMORY.clear()
+    autotune._DISK_LOADED = False
+    with pytest.warns(RuntimeWarning, match="malformed entr"):
+        plan = tuning.plan_for("gram", 50000, 160, 3)
+    assert plan.tile > 0
 
 
 def test_ladder_bounds_and_one_shot_top_rung(tune_cache):
