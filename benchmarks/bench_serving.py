@@ -1,0 +1,116 @@
+"""Serving benchmark: online predict latency + sustained throughput.
+
+Records to ``BENCH_serving.json`` (appended trajectory, like the other
+BENCH_* files):
+
+  * warm sequential single-row latency (p50 / p99) — the engine's round-trip
+    floor with a hot jit cache
+  * sustained rows/sec under >= 4 producer threads, each keeping a sliding
+    window of requests in flight (real queue depth, so the engine actually
+    microbatches), with per-request p50 / p99 under load
+  * the one-request-at-a-time throughput baseline and the microbatch
+    speedup over it
+  * engine counters: batches, distinct jit compiles, bucket occupancy
+
+  PYTHONPATH=src python -m benchmarks.bench_serving                # full
+  PYTHONPATH=src python -m benchmarks.bench_serving --n-requests 256  # smoke
+
+Acceptance bar (ISSUE 8): warm p50 single-row latency < 10 ms on CPU at
+m=1024, microbatched sustained throughput >= 5x the sequential baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import platform
+import time
+
+import jax
+
+from benchmarks.bench_pipeline import append_records
+from benchmarks.common import section
+from repro.launch.serve import (concurrent_load, fit_and_freeze,
+                                make_queries, pct, sequential_latency)
+from repro.serving import ServingEngine
+
+
+def bench(n: int, m: int, d: int, n_requests: int, producers: int,
+          window: int, max_batch: int, seed: int) -> dict:
+    t0 = time.perf_counter()
+    pipe, art = fit_and_freeze(n, m, d=d, seed=seed)
+    fit_s = time.perf_counter() - t0
+    queries = make_queries(n_requests, d, seed + 1)
+    print(f"fit n={n} m={m} d={d}: {fit_s:.2f}s")
+
+    with ServingEngine(art, max_batch=max_batch) as eng:
+        eng.warm()
+
+        section("sequential single-row (warm baseline)")
+        n_seq = min(256, n_requests)
+        t0 = time.perf_counter()
+        seq = sequential_latency(eng, queries[:n_seq])
+        seq_wall = time.perf_counter() - t0
+        seq_rows_s = n_seq / seq_wall
+        print(f"p50={pct(seq, 50) * 1e3:.2f}ms p99={pct(seq, 99) * 1e3:.2f}ms "
+              f"baseline={seq_rows_s:.0f} rows/s")
+
+        section(f"concurrent x{producers} producers (window {window})")
+        lats, wall = concurrent_load(eng, queries, producers=producers,
+                                     window=window)
+        rows_s = n_requests / wall
+        speedup = rows_s / seq_rows_s
+        print(f"{rows_s:.0f} rows/s ({speedup:.1f}x sequential)  "
+              f"p50={pct(lats, 50) * 1e3:.2f}ms "
+              f"p99={pct(lats, 99) * 1e3:.2f}ms  wall={wall:.2f}s")
+        st = eng.stats
+        print(f"engine: batches={st.batches} compiles={st.compiles} "
+              f"occupancy={st.occupancy:.2f}")
+
+    return {
+        "section": "serving",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "n": n, "m": m, "d": d, "n_requests": n_requests,
+        "producers": producers, "window": window, "max_batch": max_batch,
+        "fit_seconds": round(fit_s, 3),
+        "seq_p50_ms": round(pct(seq, 50) * 1e3, 3),
+        "seq_p99_ms": round(pct(seq, 99) * 1e3, 3),
+        "seq_rows_per_s": round(seq_rows_s, 1),
+        "load_p50_ms": round(pct(lats, 50) * 1e3, 3),
+        "load_p99_ms": round(pct(lats, 99) * 1e3, 3),
+        "rows_per_s": round(rows_s, 1),
+        "speedup_vs_sequential": round(speedup, 2),
+        "batches": st.batches, "compiles": st.compiles,
+        "occupancy": round(st.occupancy, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=16384, help="training rows")
+    ap.add_argument("--m", type=int, default=1024, help="landmarks")
+    ap.add_argument("--d", type=int, default=3)
+    ap.add_argument("--n-requests", type=int, default=4096,
+                    help="single-row requests under concurrent load "
+                         "(small values double as the CI smoke)")
+    ap.add_argument("--producers", type=int, default=4)
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default="BENCH_serving.json",
+                    help='trajectory file; "" disables the append')
+    args = ap.parse_args()
+    if args.n_requests <= 512:      # smoke: shrink the fit, keep the engine
+        args.n = min(args.n, 4096)
+        args.m = min(args.m, 256)
+
+    rec = bench(args.n, args.m, args.d, args.n_requests, args.producers,
+                args.window, args.max_batch, args.seed)
+    if args.json:
+        append_records(args.json, [rec])
+        print(f"\nappended -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import jax
 
 from repro import configs
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving.lm_engine import Engine
 
 
 def main() -> None:

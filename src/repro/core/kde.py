@@ -71,12 +71,20 @@ def cic_prep(points: Array, lo: Array, spacing: Array,
     """Fractional lattice coordinates -> (base cell (n, d) int32, frac (n, d)).
 
     Base cells are clipped to [0, grid_size - 2] so the (2,)^d stencil stays
-    in bounds; with the +-4h grid margins of `kde_binned` the clip is a
-    no-op for in-range data.
+    in bounds, and the fractional offset is clamped to [0, 1] to match: a
+    point outside the grid gets the BOUNDARY cell's value (gather) and
+    deposits all its mass in the boundary cells (scatter).  Without the frac
+    clamp an out-of-range point keeps pos - base > 1 (or < 0), which turns
+    the multilinear stencil into linear *extrapolation* — negative deposit
+    weights and out-of-support query densities the `maximum(out, 0)` floor
+    only partially masks.  With the +-4h grid margins of `kde_binned` both
+    clips are no-ops for in-range data, so fitted-path numbers are
+    unchanged; serving-time queries beyond the frozen grid bounds are where
+    the clamp is load-bearing (tests/test_kde.py locks both directions).
     """
     pos = (points - lo[None, :]) / spacing[None, :]
     base = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, grid_size - 2)
-    return base, pos - base
+    return base, jnp.clip(pos - base, 0.0, 1.0)
 
 
 def _cic_stencil(frac: Array, weights: Array | None = None) -> Array:

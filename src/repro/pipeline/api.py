@@ -132,8 +132,25 @@ class PipelineConfig:
     def to_dict(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
 
+    # tuple-typed fields that JSON round-trips as lists; from_dict restores
+    # the tuples so the frozen dataclass stays hashable and == its pre-dump
+    # self (the servable-artifact contract: `repro.serving` persists exactly
+    # this dict)
+    _TUPLE_FIELDS = ("lam_grid", "h_grid")
+
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "PipelineConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown PipelineConfig key(s) {unknown}; known fields: "
+                f"{sorted(known)} (a config dict from a newer version of "
+                "this library cannot be loaded here)")
+        d = dict(d)
+        for name in cls._TUPLE_FIELDS:
+            if d.get(name) is not None:
+                d[name] = tuple(float(v) for v in d[name])
         return cls(**d)
 
 
@@ -347,15 +364,21 @@ class SAKRRPipeline:
         if st.fit is None:
             raise RuntimeError("the fitted stage list produced no solve; "
                                "include a SolveStage to predict")
-        # predict is the same stage fold as fit: one PredictStage folded over
-        # the fitted context, so per-stage timing and overrides are uniform
-        ctx = self._ctx
-        ctx.scores = None   # any earlier scores described the old predictions
+        # predict is the same stage fold as fit — one PredictStage — but it
+        # folds over a SHALLOW PER-CALL COPY of the fitted context: the
+        # fitted snapshot (state.scores from a prior evaluate(), the
+        # evaluate-time predictions, the eval inputs) stays untouched, and
+        # interleaved / concurrent predict calls each own their context so
+        # they cannot corrupt each other's results.  Only the stage's
+        # wall-clock is folded back (state.seconds is additive metadata).
+        ctx = dataclasses.replace(
+            self._ctx, x_eval=None, y_eval=None, f_star=None,
+            predictions=None, scores=None, score_moments=None, seconds={})
         stage = stages_mod.PredictStage(
             x_eval=x_new, backend=self._predict_backend(),
             tile=self._predict_tile(tile), precision=self._solve_precision())
         self._run([stage], ctx)
-        self._snapshot(ctx)
+        self.state.seconds["predict"] = ctx.seconds["predict"]
         return ctx.predictions
 
     def fitted(self, x_train: Array) -> Array:

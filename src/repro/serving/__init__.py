@@ -1,0 +1,11 @@
+"""Online serving for fitted SA-KRR models.
+
+`ServableKRR` freezes a fitted pipeline into a save/load-able predict
+bundle; `ServingEngine` microbatches concurrent requests over it.  The
+legacy LM demo engine lives in `repro.serving.lm_engine`.
+"""
+
+from repro.serving.artifact import ServableKRR
+from repro.serving.engine import EngineStats, ServingEngine
+
+__all__ = ["ServableKRR", "ServingEngine", "EngineStats"]

@@ -1,0 +1,195 @@
+"""Frozen servable KRR artifact: everything `predict` needs, nothing else.
+
+`ServableKRR.freeze(pipeline)` snapshots a fitted `SAKRRPipeline` into a
+compact, immutable bundle — the m landmarks, the solved beta, the whitened
+K_mm factor, the calibrated (lam, h) pair, the kernel/pipeline config, and
+the fitted KDE grid bounds — that can be saved to one `.npz` file and served
+from a process that never imports the training data.  The serving contract:
+
+  * ``artifact.predict(x)`` calls `nystrom.predict_streaming` DIRECTLY with
+    the execution knobs (backend / tile / precision) captured at freeze
+    time, so it is bit-equal to `pipeline.predict(x)` on the same inputs —
+    and it never touches pipeline state, so any number of concurrent
+    callers (the microbatching `repro.serving.engine`) are safe.
+  * ``save`` / ``load`` round-trip losslessly: arrays go through npz binary
+    (exact), scalars and the `PipelineConfig` dict through JSON
+    (`PipelineConfig.from_dict` restores tuple-typed fields and rejects
+    unknown keys) — locked by tests/test_serving.py.
+  * ``in_support(x)`` flags queries inside the fitted KDE grid bounds.
+    Out-of-support queries still predict fine (the kernel extrapolates
+    smoothly), but any density-derived serving logic must clamp to the
+    boundary — which `core.kde.cic_prep` now guarantees.
+
+The whitened factor W (K_mm's eigvecs scaled by 1/sqrt(eigvals) above the
+jitter floor, zero on the truncated tail) is not needed by the mean
+predictor; it is frozen alongside because serving-side extensions —
+predictive variance, leverage of incoming queries, score monitoring — are
+all quadratic forms in W^T k(x, X_m), and recomputing it needs an O(m^3)
+eigh the request path cannot afford.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kde, nystrom
+from repro.core.kernels import Kernel, kernel_matrix
+
+Array = jax.Array
+
+FORMAT_VERSION = 1
+
+
+def _whitened_factor(kernel: Kernel, landmarks: Array,
+                     jitter: float) -> Array:
+    """W = U E^{-1/2} on K_mm's eigenspaces above the jitter floor."""
+    k_mm = kernel_matrix(kernel, landmarks)
+    evals, evecs = jnp.linalg.eigh(k_mm)
+    tau = jitter * evals[-1]
+    inv_sqrt = jnp.where(evals > tau,
+                         1.0 / jnp.sqrt(jnp.maximum(evals, tau)), 0.0)
+    return evecs * inv_sqrt[None, :]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServableKRR:
+    """Immutable fitted-model bundle (see module docstring)."""
+
+    config: Any                  # PipelineConfig (untyped: avoid the cycle)
+    lam: float                   # calibrated/resolved regularizer
+    bandwidth: float | None      # calibrated/resolved KDE h (None: direct)
+    beta: Array                  # (m,)
+    landmarks: Array             # (m, d)
+    landmark_idx: Array          # (m,) indices into the fitted training set
+    k_mm_whitener: Array         # (m, m) whitened K_mm factor W
+    grid_lo: Array | None        # (d,) fitted KDE grid bounds (binned path)
+    grid_hi: Array | None
+    n_fit: int                   # training rows the model was fitted on
+    backend: str | None          # predict execution knobs, frozen so the
+    tile: int | None             # served numbers match pipeline.predict
+    precision: str | None
+
+    # ------------------------------------------------------------- freeze --
+    @classmethod
+    def freeze(cls, pipeline) -> "ServableKRR":
+        """Capture a fitted `SAKRRPipeline` (fit/evaluate/calibrate done)."""
+        st = pipeline.state
+        if st is None or st.fit is None:
+            raise RuntimeError(
+                "freeze() needs a fitted pipeline: call fit/evaluate/"
+                "calibrate (with a SolveStage) first")
+        cfg = pipeline.config
+        ctx = pipeline._ctx
+        bandwidth = ctx.bandwidth
+        if bandwidth is None:
+            bandwidth = getattr(cfg, "kde_bandwidth", None)
+        grid_lo = grid_hi = None
+        if ctx.x is not None and ctx.d <= 3:
+            h = jnp.asarray(bandwidth if bandwidth is not None
+                            else kde.scott_bandwidth(ctx.x), ctx.x.dtype)
+            bandwidth = float(h)
+            grid_lo, grid_hi = kde.binned_bounds(ctx.x, ctx.x, h)
+        return cls(
+            config=cfg, lam=float(st.fit.lam),
+            bandwidth=float(bandwidth) if bandwidth is not None else None,
+            beta=st.fit.beta, landmarks=st.fit.landmarks,
+            landmark_idx=st.fit.landmark_idx,
+            k_mm_whitener=_whitened_factor(pipeline.kernel,
+                                           st.fit.landmarks, cfg.jitter),
+            grid_lo=grid_lo, grid_hi=grid_hi, n_fit=st.n,
+            backend=pipeline._predict_backend(),
+            tile=pipeline._predict_tile(), precision=pipeline._solve_precision())
+
+    # ------------------------------------------------------------ predict --
+    @property
+    def kernel(self) -> Kernel:
+        return self.config.build_kernel()
+
+    @property
+    def num_landmarks(self) -> int:
+        return int(self.beta.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.landmarks.shape[1])
+
+    def as_fit(self) -> nystrom.NystromFit:
+        return nystrom.NystromFit(beta=self.beta, landmarks=self.landmarks,
+                                  landmark_idx=self.landmark_idx,
+                                  lam=self.lam)
+
+    def predict(self, x: Array) -> Array:
+        """f(x) for (k, d) query rows — stateless, jit-able, bit-equal to
+        `pipeline.predict(x)` (same `nystrom.predict_streaming` call with
+        the frozen backend/tile/precision)."""
+        return nystrom.predict_streaming(self.kernel, self.as_fit(), x,
+                                         tile=self.tile, backend=self.backend,
+                                         precision=self.precision)
+
+    def in_support(self, x: Array) -> Array:
+        """(k,) bool: query inside the fitted KDE grid bounds (all dims)."""
+        if self.grid_lo is None:
+            raise RuntimeError("no grid bounds were frozen (direct-KDE / "
+                               "d > 3 fit); in_support is undefined")
+        return jnp.all((x >= self.grid_lo[None, :])
+                       & (x <= self.grid_hi[None, :]), axis=1)
+
+    # --------------------------------------------------------- save / load --
+    def save(self, path: str) -> str:
+        """One-file npz bundle: arrays binary-exact, config/scalars as an
+        embedded JSON header.  Returns the written path (npz-suffixed)."""
+        meta = {
+            "format_version": FORMAT_VERSION,
+            "pipeline_config": self.config.to_dict(),
+            "lam": self.lam, "bandwidth": self.bandwidth,
+            "n_fit": self.n_fit, "backend": self.backend,
+            "tile": self.tile, "precision": self.precision,
+            "has_grid_bounds": self.grid_lo is not None,
+        }
+        arrays = {
+            "beta": np.asarray(self.beta),
+            "landmarks": np.asarray(self.landmarks),
+            "landmark_idx": np.asarray(self.landmark_idx),
+            "k_mm_whitener": np.asarray(self.k_mm_whitener),
+        }
+        if self.grid_lo is not None:
+            arrays["grid_lo"] = np.asarray(self.grid_lo)
+            arrays["grid_hi"] = np.asarray(self.grid_hi)
+        if not path.endswith(".npz"):
+            path += ".npz"
+        with open(path, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ServableKRR":
+        from repro.pipeline import PipelineConfig
+
+        if not path.endswith(".npz"):
+            path += ".npz"
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"].tobytes()).decode())
+            if meta.get("format_version") != FORMAT_VERSION:
+                raise ValueError(
+                    f"servable bundle {path!r} has format_version "
+                    f"{meta.get('format_version')!r}; this build reads "
+                    f"{FORMAT_VERSION}")
+            arrays = {k: jnp.asarray(z[k]) for k in z.files
+                      if k != "__meta__"}
+        cfg = PipelineConfig.from_dict(meta["pipeline_config"])
+        return cls(
+            config=cfg, lam=float(meta["lam"]),
+            bandwidth=meta["bandwidth"], beta=arrays["beta"],
+            landmarks=arrays["landmarks"],
+            landmark_idx=arrays["landmark_idx"],
+            k_mm_whitener=arrays["k_mm_whitener"],
+            grid_lo=arrays.get("grid_lo"), grid_hi=arrays.get("grid_hi"),
+            n_fit=int(meta["n_fit"]), backend=meta["backend"],
+            tile=meta["tile"], precision=meta["precision"])

@@ -1,0 +1,70 @@
+"""Legacy LM demo engine: prefill + jit'd decode loop with sampling.
+
+The KRR serving path lives in `repro.serving.engine` / `repro.serving.
+artifact`; this module only backs the language-model demo stack
+(`examples/serve_lm.py`, `repro.models`) and its smoke tests.
+
+Production shape: one jit'd ``decode_step`` (params, token, caches, index)
+reused across requests; the engine batches requests, left-pads prompts to a
+common length, greedily (or with temperature) samples until max_new_tokens.
+On TPU the same step is what the decode_32k / long_500k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: Array          # (b, max_new_tokens)
+    logprobs: Array        # (b, max_new_tokens)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params):
+        self.cfg = cfg
+        self.params = params
+        self._decode = jax.jit(
+            lambda p, t, c, i: M.decode_step(p, t, c, i, cfg))
+        self._prefill = jax.jit(
+            lambda p, toks, S: M.prefill(p, toks, cfg, cache_seq_len=S),
+            static_argnums=(2,))
+
+    def generate(self, key: Array, prompts: Array, max_new_tokens: int,
+                 temperature: float = 0.0) -> GenerationResult:
+        """prompts: (b, prompt_len) int32 (right-aligned, no padding)."""
+        b, t0 = prompts.shape[:2]
+        total = t0 + max_new_tokens
+        prompt_in = prompts
+        if self.cfg.inputs_embeds:  # audio/vlm stubs: embed via the table
+            prompt_in = jnp.take(self.params["embed"], prompts, axis=0)
+        logits, caches = self._prefill(self.params, prompt_in, total)
+        out_tokens, out_lp = [], []
+        tok = None
+        for i in range(max_new_tokens):
+            lp = jax.nn.log_softmax(logits[:, 0].astype(jnp.float32), axis=-1)
+            if temperature <= 0.0:
+                tok = jnp.argmax(lp, axis=-1)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, lp / temperature, axis=-1)
+            out_tokens.append(tok)
+            out_lp.append(jnp.take_along_axis(lp, tok[:, None], 1)[:, 0])
+            step_in = tok[:, None]
+            if self.cfg.inputs_embeds:  # audio/vlm stubs: embed via table
+                step_in = jnp.take(self.params["embed"], step_in, axis=0)
+            logits, caches = self._decode(self.params, step_in, caches,
+                                          jnp.int32(t0 + i))
+        return GenerationResult(
+            tokens=jnp.stack(out_tokens, axis=1),
+            logprobs=jnp.stack(out_lp, axis=1))

@@ -62,3 +62,54 @@ def test_scott_bandwidth_scales():
     x_small = jax.random.normal(jax.random.PRNGKey(6), (100, 2))
     x_big = jax.random.normal(jax.random.PRNGKey(6), (10000, 2))
     assert float(kde.scott_bandwidth(x_big)) < float(kde.scott_bandwidth(x_small))
+
+
+# ------------------------------------------------- out-of-grid clamping --
+# Regressions for the cic_prep frac clamp: a point outside the grid bounds
+# must read/deposit the BOUNDARY value, not linearly extrapolate the grid.
+
+def test_cic_prep_clamps_base_and_frac():
+    lo = jnp.zeros(2)
+    spacing = jnp.full((2,), 0.5)
+    gs = 8                                    # grid spans [0, 3.5] per dim
+    pts = jnp.array([[-3.0, 1.0], [9.9, 1.7], [1.25, 3.49]])
+    base, frac = kde.cic_prep(pts, lo, spacing, gs)
+    assert int(base.min()) >= 0 and int(base.max()) <= gs - 2
+    assert float(frac.min()) >= 0.0 and float(frac.max()) <= 1.0
+    # in-range coordinates are untouched by both clips
+    np.testing.assert_allclose(np.asarray(frac[2]), [0.5, 0.98], atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(base[2]), [2, 6])
+
+
+def test_scatter_deposit_out_of_range_mass_stays_on_boundary():
+    lo = jnp.zeros(1)
+    spacing = jnp.ones(1)
+    gs = 6                                    # nodes at 0..5
+    pts = jnp.array([[12.0], [-4.0], [2.5]])
+    grid = np.asarray(kde.scatter_cic(pts, lo, spacing, gs))
+    # pre-clamp, frac = 8 at the right edge deposits -7/+8 (negative mass)
+    assert grid.min() >= 0.0, grid
+    np.testing.assert_allclose(grid.sum(), 3.0, rtol=1e-6)
+    assert grid[-1] == pytest.approx(1.0)     # +12 -> all mass at node 5
+    assert grid[0] == pytest.approx(1.0)      # -4 -> all mass at node 0
+    np.testing.assert_allclose(grid[2:4], [0.5, 0.5], rtol=1e-6)
+
+
+def test_out_of_grid_query_gets_boundary_density():
+    """Queries beyond pinned grid bounds: boundary value, verified against
+    the kde_direct oracle evaluated AT the boundary."""
+    x = jax.random.uniform(jax.random.PRNGKey(8), (2000, 1))
+    h = 0.1
+    lo, hi = jnp.array([0.0]), jnp.array([1.0])
+    q = jnp.array([[1.0], [1.7], [55.0], [-3.0], [0.0]])
+    dens = np.asarray(kde.kde_binned(q, x, h, grid_size=64, lo=lo, hi=hi))
+    # every beyond-hi query clamps to the SAME stencil -> bit-equal values,
+    # and they agree with the at-edge query up to fp in the lattice coords
+    assert dens[1] == dens[2]
+    assert dens[0] == pytest.approx(dens[1], rel=1e-5)
+    assert dens[3] == pytest.approx(dens[4], rel=1e-5)
+    # and that value is the true edge density, not an extrapolation
+    oracle_hi = float(kde.kde_direct(jnp.array([[1.0]]), x, h)[0])
+    oracle_lo = float(kde.kde_direct(jnp.array([[0.0]]), x, h)[0])
+    assert dens[0] == pytest.approx(oracle_hi, rel=0.05)
+    assert dens[4] == pytest.approx(oracle_lo, rel=0.05)

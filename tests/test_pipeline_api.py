@@ -3,6 +3,8 @@ the O(tile · m) memory contract surface (tile invariance)."""
 
 from __future__ import annotations
 
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -23,6 +25,54 @@ def test_config_roundtrip_and_defaults():
     assert PipelineConfig(kernel_kind="gaussian", sigma=0.5).build_kernel().sigma == 0.5
     with pytest.raises(ValueError):
         PipelineConfig(kernel_kind="laplace").build_kernel()
+
+
+def test_config_json_roundtrip_restores_tuples():
+    """JSON turns lam_grid/h_grid tuples into lists; from_dict must restore
+    them (frozen-dataclass equality/hash) — the servable-artifact contract."""
+    cfg = PipelineConfig(lam_grid=(1e-3, 1e-2), h_grid=(0.1, 0.2, 0.4),
+                         num_landmarks=64)
+    again = PipelineConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert again == cfg
+    assert hash(again) == hash(cfg)
+    assert isinstance(again.lam_grid, tuple)
+    assert isinstance(again.h_grid, tuple)
+    # None grids stay None through the round trip
+    none_cfg = PipelineConfig()
+    assert PipelineConfig.from_dict(
+        json.loads(json.dumps(none_cfg.to_dict()))) == none_cfg
+
+
+def test_config_from_dict_rejects_unknown_keys():
+    d = PipelineConfig().to_dict()
+    d["not_a_field"] = 1
+    with pytest.raises(ValueError, match="unknown PipelineConfig key"):
+        PipelineConfig.from_dict(d)
+
+
+def test_predict_is_reentrant_and_preserves_evaluate_state():
+    """Regression: predict used to fold over the SAVED fitted context,
+    clobbering evaluate()'s scores/predictions and letting interleaved
+    predict calls corrupt each other via the shared snapshot."""
+    data = krr_data.bimodal(jax.random.PRNGKey(7), 1024, d=3)
+    pipe = SAKRRPipeline(PipelineConfig(num_landmarks=48, tile=512))
+    scores = pipe.evaluate(data.x, data.y, f_star=data.f_star)
+    eval_preds = np.asarray(pipe.state.predictions) \
+        if pipe.state.predictions is not None else None
+
+    qa = data.x[:100]
+    qb = data.x[100:150] + 0.25
+    pa_first = np.asarray(pipe.predict(qa))
+    pb = np.asarray(pipe.predict(qb))
+    pa_second = np.asarray(pipe.predict(qa))
+    # interleaved predicts are independent: same query, same answer
+    np.testing.assert_array_equal(pa_first, pa_second)
+    assert pb.shape == (50,)
+    # the evaluate() snapshot survives any number of predicts
+    assert pipe.state.scores == scores
+    if eval_preds is not None:
+        np.testing.assert_array_equal(
+            np.asarray(pipe.state.predictions), eval_preds)
 
 
 def test_pipeline_fit_quality_bimodal():

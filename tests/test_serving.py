@@ -1,0 +1,145 @@
+"""repro.serving: frozen artifact round-trip parity + microbatching engine.
+
+The contract under test (pipeline/README.md "Serving"): freeze -> save ->
+load -> predict is BIT-equal to the live `pipeline.predict`, and the
+threaded engine returns per-request results matching single-call predict.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import krr_data
+from repro.pipeline import PipelineConfig, SAKRRPipeline
+from repro.serving import ServableKRR, ServingEngine
+
+N, M, D = 768, 64, 3
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    data = krr_data.bimodal(jax.random.PRNGKey(0), N, d=D)
+    cfg = PipelineConfig(num_landmarks=M, tile=256, seed=0)
+    pipe = SAKRRPipeline(cfg).fit(data.x, data.y)
+    queries = krr_data.bimodal(jax.random.PRNGKey(1), 200, d=D).x
+    return pipe, ServableKRR.freeze(pipe), queries
+
+
+def test_freeze_requires_fitted_pipeline():
+    with pytest.raises(RuntimeError, match="needs a fitted pipeline"):
+        ServableKRR.freeze(SAKRRPipeline(PipelineConfig(num_landmarks=M)))
+
+
+def test_artifact_predict_bit_equal_to_pipeline(fitted):
+    pipe, art, q = fitted
+    np.testing.assert_array_equal(np.asarray(pipe.predict(q)),
+                                  np.asarray(art.predict(q)))
+
+
+def test_artifact_save_load_roundtrip_lossless(fitted, tmp_path):
+    pipe, art, q = fitted
+    path = art.save(os.fspath(tmp_path / "model"))
+    assert path.endswith(".npz")
+    loaded = ServableKRR.load(path)
+    # config round-trips through JSON to an EQUAL frozen dataclass
+    assert loaded.config == pipe.config
+    assert (loaded.lam, loaded.bandwidth, loaded.n_fit) == (
+        art.lam, art.bandwidth, art.n_fit)
+    assert (loaded.backend, loaded.tile, loaded.precision) == (
+        art.backend, art.tile, art.precision)
+    for name in ("beta", "landmarks", "landmark_idx", "k_mm_whitener",
+                 "grid_lo", "grid_hi"):
+        np.testing.assert_array_equal(np.asarray(getattr(loaded, name)),
+                                      np.asarray(getattr(art, name)))
+    # the acceptance bar: loaded predict bit-equal to the live pipeline
+    np.testing.assert_array_equal(np.asarray(loaded.predict(q)),
+                                  np.asarray(pipe.predict(q)))
+
+
+def test_artifact_predict_never_touches_pipeline_state(fitted):
+    pipe, art, q = fitted
+    before_scores = pipe.state.scores
+    before_beta = np.asarray(pipe.state.fit.beta).copy()
+    art.predict(q)
+    assert pipe.state.scores is before_scores
+    np.testing.assert_array_equal(np.asarray(pipe.state.fit.beta),
+                                  before_beta)
+
+
+def test_artifact_in_support_flags_grid_bounds(fitted):
+    _, art, _ = fitted
+    inside = jnp.asarray(art.landmarks[:4])
+    outside = inside + 1e3
+    assert bool(jnp.all(art.in_support(inside)))
+    assert not bool(jnp.any(art.in_support(outside)))
+
+
+def test_engine_matches_single_call_predict(fitted):
+    _, art, q = fitted
+    ref = np.asarray(art.predict(q))
+    with ServingEngine(art, max_batch=64, min_bucket=8) as eng:
+        # mixed request sizes, including single (d,) rows
+        futs = [eng.submit(np.asarray(q[0]))]
+        futs += [eng.submit(np.asarray(q[i:i + 7]))
+                 for i in range(1, 50, 7)]
+        out0 = futs[0].result()
+        assert out0.shape == ()
+        np.testing.assert_allclose(out0, ref[0], rtol=1e-6, atol=1e-6)
+        for j, f in enumerate(futs[1:]):
+            i = 1 + 7 * j
+            np.testing.assert_allclose(f.result(), ref[i:i + 7],
+                                       rtol=1e-6, atol=1e-6)
+    assert eng.stats.rows == 50
+    assert eng.stats.batches >= 1
+
+
+def test_engine_threaded_smoke_matches_reference(fitted):
+    """4 producer threads of single-row requests: every response matches
+    the single-call predict for that row."""
+    _, art, q = fitted
+    ref = np.asarray(art.predict(q))
+    errs: list[AssertionError] = []
+
+    def producer(rows_idx):
+        try:
+            futs = [(i, eng.submit(np.asarray(q[i]))) for i in rows_idx]
+            for i, f in futs:
+                np.testing.assert_allclose(f.result(timeout=60), ref[i],
+                                           rtol=1e-6, atol=1e-6)
+        except AssertionError as e:       # surface across the thread edge
+            errs.append(e)
+
+    with ServingEngine(art, max_batch=32) as eng:
+        eng.warm()
+        threads = [threading.Thread(target=producer,
+                                    args=(range(p, len(q), 4),))
+                   for p in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not errs, errs[0]
+    assert eng.stats.rows == len(q)
+    # microbatching actually happened: fewer dispatches than requests
+    assert eng.stats.batches < len(q)
+    assert eng.stats.compiles <= 4      # pow2 buckets 8..32 + warm only
+
+
+def test_engine_submit_validates_and_requires_start(fitted):
+    _, art, _ = fitted
+    eng = ServingEngine(art)
+    with pytest.raises(RuntimeError, match="not started"):
+        eng.submit(np.zeros((1, D)))
+    with eng:
+        with pytest.raises(ValueError, match="expected rows of dim"):
+            eng.submit(np.zeros((2, D + 1)))
+    # stop() is idempotent and re-poses the not-started error
+    eng.stop()
+    with pytest.raises(RuntimeError, match="not started"):
+        eng.submit(np.zeros((1, D)))

@@ -17,7 +17,7 @@ from repro.data import tokens
 from repro.distributed import compression
 from repro.models import model as M
 from repro.optim import adamw
-from repro.serving.engine import Engine
+from repro.serving.lm_engine import Engine
 from repro.training.train import Trainer, TrainerConfig, make_train_step
 
 
