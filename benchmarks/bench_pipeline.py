@@ -44,6 +44,13 @@ fast CI job smokes it at n=8192):
 
   PYTHONPATH=src python -m benchmarks.bench_pipeline --precision            # n=1e6
   PYTHONPATH=src python -m benchmarks.bench_pipeline --precision --n 8192
+
+Online ingestion (`SAKRRPipeline.partial_fit` over banked accumulator state
+vs a full refit, plus frozen vs decayed vs SQUEAK drift tracking on
+stationary and shifting streams; the fast CI job smokes it at n=8192):
+
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --online               # n=262144
+  PYTHONPATH=src python -m benchmarks.bench_pipeline --online --n 8192
 """
 
 from __future__ import annotations
@@ -463,6 +470,117 @@ def precision_bench(n: int = 1_000_000, seed: int = 0,
     return records
 
 
+# ------------------------------------------------------------------- online --
+
+def online_bench(n: int = 262_144, seed: int = 0) -> list[dict]:
+    """Online-ingestion economics at one n (section `pipeline_online`).
+
+    Two experiments:
+
+    * **partial_fit vs full refit** — a fitted pipeline absorbs one
+      tile-sized chunk via `partial_fit` (O(chunk · m) stream + O(m^3)
+      solve, banked accumulator state) vs re-running the whole fit fold on
+      n + chunk rows.  Both jit-warmed, best-of-reps; the acceptance bar
+      is >= 5x at n = 262144 (the fast CI job smokes the same protocol at
+      n = 8192 without a bar — the n/chunk ratio is what buys the gap).
+    * **drift tracking** — a stationary and a shifting stream are fed
+      chunk-by-chunk to three policies: FROZEN (never update), DECAYED
+      (`partial_fit` with exponential forgetting — fixed landmark set),
+      and SQUEAK (`OnlineLandmarks` add/drop + weighted coreset refit).
+      The shifting stream drifts BOTH the covariates (bimodal mode offset
+      2.0 -> 4.0) and the concept (target amplitude 1x -> 2x): pure
+      covariate shift with a fixed target leaves old data valid, so
+      forgetting buys nothing — amplitude drift is what makes stale rows
+      actively wrong and forgetting necessary.  Final risk is scored on a
+      fresh eval set from the LAST chunk's distribution: under shift the
+      adaptive policies must beat frozen, and SQUEAK's relocated
+      dictionary should beat decay-on-stale-landmarks.
+    """
+    from repro.pipeline import online as online_mod
+
+    tile = min(n, 16_384)
+    chunk = tile
+    data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
+    stream = krr_data.bimodal(jax.random.PRNGKey(seed + 1), 4 * chunk, d=3)
+    cfg = PipelineConfig(nu=1.5, tile=tile)
+    records = []
+
+    # --- partial_fit vs full refit -------------------------------------
+    pipe = SAKRRPipeline(cfg).fit(data.x, data.y)
+    m = pipe.state.num_landmarks
+    pipe.partial_fit(stream.x[:chunk], stream.y[:chunk])   # jit warm
+    reps = 3
+    pf_s = float("inf")
+    for r in range(1, reps + 1):
+        lo = r * chunk
+        t0 = time.perf_counter()
+        pipe.partial_fit(stream.x[lo:lo + chunk], stream.y[lo:lo + chunk])
+        pf_s = min(pf_s, time.perf_counter() - t0)
+
+    import jax.numpy as jnp
+    x_full = jnp.concatenate([data.x, stream.x[:chunk]])
+    y_full = jnp.concatenate([data.y, stream.y[:chunk]])
+    SAKRRPipeline(cfg).fit(x_full, y_full)                 # jit warm
+    refit_s = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        SAKRRPipeline(cfg).fit(x_full, y_full)
+        refit_s = min(refit_s, time.perf_counter() - t0)
+    speedup = refit_s / max(pf_s, 1e-9)
+    rec = {"section": "pipeline_online", "experiment": "partial_fit",
+           "n": n, "m": m, "chunk": chunk,
+           "partial_fit_seconds": round(pf_s, 4),
+           "full_refit_seconds": round(refit_s, 4),
+           "speedup": round(speedup, 2)}
+    records.append(rec)
+    print(f"partial_fit {pf_s:.4f}s vs full refit {refit_s:.4f}s at "
+          f"n={n}, chunk={chunk} -> {speedup:.1f}x")
+
+    # --- drift tracking: frozen vs decayed vs SQUEAK -------------------
+    n0 = min(n, 16_384)
+    csize, t_chunks, gamma = 4_096, 6, 0.6
+    cfg0 = PipelineConfig(nu=1.5, tile=min(n0, 16_384))
+    for scenario in ("stationary", "shifting"):
+        drift = 0.0 if scenario == "stationary" else 1.0
+        offs = [2.0 + drift * 2.0 * (t + 1) / t_chunks
+                for t in range(t_chunks)]
+        scales = [1.0 + drift * (t + 1) / t_chunks
+                  for t in range(t_chunks)]
+        base = krr_data.bimodal(jax.random.PRNGKey(seed + 2), n0, d=3)
+        frozen = SAKRRPipeline(cfg0).fit(base.x, base.y)
+        decayed = SAKRRPipeline(cfg0).fit(base.x, base.y)
+        squeak = online_mod.seed_landmarks(decayed, oversample=3.0)
+        for t, (off, sc) in enumerate(zip(offs, scales)):
+            ch = krr_data.bimodal(jax.random.PRNGKey(seed + 10 + t),
+                                  csize, d=3, offset=off)
+            decayed.partial_fit(ch.x, ch.y * sc, decay=gamma)
+            squeak.update(ch.x, ch.y * sc)
+        sq_fit = squeak.refit()
+        ev = krr_data.bimodal(jax.random.PRNGKey(seed + 99), 8_192, d=3,
+                              offset=offs[-1])
+        truth = ev.f_star * scales[-1]
+        risks = {
+            "frozen": float(krr.in_sample_risk(frozen.predict(ev.x),
+                                               truth)),
+            "decayed": float(krr.in_sample_risk(decayed.predict(ev.x),
+                                                truth)),
+            "squeak": float(krr.in_sample_risk(nystrom.predict_streaming(
+                frozen.kernel, sq_fit, ev.x, tile=cfg0.tile), truth)),
+        }
+        rec = {"section": "pipeline_online", "experiment": "drift",
+               "scenario": scenario, "n0": n0, "chunk": csize,
+               "chunks": t_chunks, "decay": gamma,
+               "squeak_dict_size": len(squeak),
+               "squeak_changes": squeak.changes,
+               "risk": {k: round(v, 6) for k, v in risks.items()}}
+        records.append(rec)
+        print(f"drift[{scenario}]: risk frozen={risks['frozen']:.4e} "
+              f"decayed={risks['decayed']:.4e} "
+              f"squeak={risks['squeak']:.4e} "
+              f"(|D|={len(squeak)}, changes={squeak.changes})")
+    return records
+
+
 # ---------------------------------------------------------------- calibrate --
 
 def calibrate_bench(n: int = 16_384, seed: int = 0) -> list[dict]:
@@ -635,8 +753,12 @@ def main(json_out: str | None = "BENCH_pipeline.json",
          n_max: int = 262_144, n_only: int | None = None,
          stages: list[str] | None = None, compare: bool = False,
          calibrate: bool = False, accumulator: bool = False,
-         autotune: bool = False, precision: bool = False) -> None:
-    if precision:
+         autotune: bool = False, precision: bool = False,
+         online: bool = False) -> None:
+    if online:
+        print("\n## pipeline online (partial_fit vs refit + drift tracking)")
+        records = online_bench(n=n_only or 262_144)
+    elif precision:
         print("\n## pipeline precision (fp32 vs Ozaki bf16-split Gram)")
         records = precision_bench(n=n_only or 1_000_000, json_path=json_out)
     elif autotune:
@@ -701,10 +823,15 @@ if __name__ == "__main__":
                          "plain/compensated accumulation, with joint "
                          "(tile, precision) autotuned rows and both "
                          "backends' resolved plans (default n=1e6)")
+    ap.add_argument("--online", action="store_true",
+                    help="online ingestion: partial_fit-per-chunk vs full "
+                         "refit wall-clock, plus frozen vs decayed vs "
+                         "SQUEAK drift tracking on stationary and shifting "
+                         "streams (default n=262144)")
     ap.add_argument("--json", default="BENCH_pipeline.json")
     args = ap.parse_args()
     main(json_out=args.json or None, n_max=args.n_max, n_only=args.n,
          stages=args.stages.split(",") if args.stages else None,
          compare=args.compare, calibrate=args.calibrate,
          accumulator=args.accumulator, autotune=args.autotune,
-         precision=args.precision)
+         precision=args.precision, online=args.online)

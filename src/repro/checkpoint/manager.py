@@ -44,9 +44,15 @@ class Manager:
 
     # ------------------------------------------------------------- write ----
     def save(self, step: int, state) -> None:
-        flat = _flatten(state)  # host copy happens in caller's thread (cheap
-        # for sharded arrays: device_get of addressable shards)
+        # join the previous async write BEFORE touching the new state: the
+        # host copy below can block on device work for a long time, and
+        # overlapping it with a still-running writer thread means a crash
+        # in _flatten leaves the previous checkpoint half-written with its
+        # thread orphaned (and an in-place-updated state could be
+        # snapshotted while the old writer still reads the same buffers)
         self.wait()
+        flat = _flatten(state)  # host copy in caller's thread (cheap for
+        # sharded arrays: device_get of addressable shards)
         if self.async_write:
             self._thread = threading.Thread(
                 target=self._write, args=(step, flat), daemon=True)

@@ -1,0 +1,209 @@
+"""First-class accumulator state for the streaming engine.
+
+Every streaming reduction in this codebase (Gram + rhs normal equations,
+the CIC deposit, the fused score moments) is a monoid fold over row tiles.
+Historically the fold state lived only as a transient `lax.scan` carry
+inside one `tile_reduce` call — so new data meant a full refit.  This
+module makes that state a first-class value with an explicit monoid
+contract:
+
+  * ``init(spec, zeros)``    — the identity element;
+  * absorb                   — fold more tiles in (domain-specific: callers
+    re-enter `tile_reduce(..., init_state=state.value)` so the scan carry
+    CONTINUES from the saved state; a tile-aligned sequence of absorbs is
+    the same op sequence as the one-shot fold, hence bit-equal under the
+    plain accumulator — locked by tests/test_accstate.py);
+  * ``merge(a, b)``          — combine two independently-built states
+    (the cross-chip psum, parallel chunk builds, window folds).  For the
+    compensated strategy the merge is itself error-free: hi parts combine
+    through `two_sum` and the rounding error is banked in lo;
+  * ``decay(state, gamma)``  — exponential forgetting for drifting
+    streams.  Applied in the (hi, lo) domain — BOTH floats scale — so the
+    banked compensation survives the reweighting;
+  * ``finalize(state)``      — collapse to the reduced value (identity for
+    plain, hi + lo for compensated).
+
+`AccState` carries, besides the strategy state itself, the two scalars
+every consumer of a reduction needs to interpret it: ``rows`` (the
+effective — possibly decayed, hence fractional — number of rows absorbed,
+i.e. the `n` of the normal equations) and ``steps`` (per-chip scan steps,
+the error-budget count behind `streaming.eps_scale`).  Both are array
+leaves, so a state round-trips through `jax.tree` transforms, psums, and
+`checkpoint.Manager` unchanged.
+
+The strategy itself is static aux data: a ``spec`` that is either a name
+(``"plain"`` / ``"compensated"``) or, for `multi_reduce` states, a tuple
+of per-slot names.  Specs are plain hashable values, so AccStates of the
+same spec share jit caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import streaming
+
+Array = jax.Array
+
+# A strategy spec: one accumulator name, or a tuple of per-slot names for
+# states produced by `multi_reduce`.
+Spec = Any
+
+
+def normalize_spec(accumulator: Any) -> Spec:
+    """Canonical hashable spec for a strategy name or instance."""
+    if isinstance(accumulator, str):
+        streaming.get(accumulator)  # validate
+        return accumulator
+    if isinstance(accumulator, (tuple, list)):
+        return tuple(normalize_spec(a) for a in accumulator)
+    if isinstance(accumulator, streaming.MultiAccumulator):
+        return tuple(a.name for a in accumulator.accumulators)
+    name = getattr(accumulator, "name", None)
+    if name in streaming.ACCUMULATORS:
+        return name
+    raise ValueError(f"cannot derive an AccState spec from {accumulator!r}")
+
+
+def strategy(spec: Spec):
+    """Strategy instance for a spec (MultiAccumulator for tuple specs).
+
+    Tuple specs resolve with the default leafwise-add combines — enough
+    for merge/decay/finalize; absorbs that need a non-additive combine
+    (the CIC scatter) construct their own `MultiAccumulator` at the
+    `tile_reduce` call site, which shares per-slot state layout.
+    """
+    if isinstance(spec, tuple):
+        return streaming.MultiAccumulator(spec)
+    return streaming.get(spec)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AccState:
+    """Accumulator state + row/step bookkeeping; a jax pytree."""
+
+    value: Any                  # strategy state (tree / (hi, lo) / slots)
+    rows: Array                 # scalar f32: effective rows absorbed
+    steps: Array                # scalar i32: per-chip scan steps absorbed
+    spec: Spec = "plain"        # static: strategy name(s)
+
+    def tree_flatten(self):
+        return (self.value, self.rows, self.steps), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        value, rows, steps = children
+        return cls(value=value, rows=rows, steps=steps, spec=spec)
+
+    @property
+    def accumulator(self):
+        return strategy(self.spec)
+
+
+def init(accumulator: Any, zeros: Any, *, rows: float = 0.0,
+         steps: int = 0) -> AccState:
+    """The monoid identity: a zero state shaped like `zeros`."""
+    spec = normalize_spec(accumulator)
+    return AccState(value=strategy(spec).init(zeros),
+                    rows=jnp.asarray(rows, jnp.float32),
+                    steps=jnp.asarray(steps, jnp.int32),
+                    spec=spec)
+
+
+def wrap(accumulator: Any, value: Any, *, rows, steps) -> AccState:
+    """Wrap a raw strategy state (e.g. a `tile_reduce(finalize=False)`
+    result) into an AccState with explicit row/step bookkeeping."""
+    return AccState(value=value,
+                    rows=jnp.asarray(rows, jnp.float32),
+                    steps=jnp.asarray(steps, jnp.int32),
+                    spec=normalize_spec(accumulator))
+
+
+def merge(a: AccState, b: AccState) -> AccState:
+    """Combine two independently-built states (commutative; bit-equal
+    under operand swap — IEEE addition and TwoSum are both symmetric)."""
+    if normalize_spec(a.spec) != normalize_spec(b.spec):
+        raise ValueError(
+            f"cannot merge AccStates of specs {a.spec!r} and {b.spec!r}")
+    return AccState(value=strategy(a.spec).merge(a.value, b.value),
+                    rows=a.rows + b.rows, steps=a.steps + b.steps,
+                    spec=a.spec)
+
+
+def decay(state: AccState, gamma: float) -> AccState:
+    """Exponential forgetting: scale every value leaf by `gamma`.
+
+    For the compensated strategy this scales hi AND lo, so the banked
+    rounding error decays with the sum it compensates instead of being
+    collapsed or dropped.  ``rows`` decays identically (the effective
+    sample size of the reweighted fold); ``steps`` is an error-budget
+    COUNT, not a mass, and is left alone.
+    """
+    g = jnp.asarray(gamma, jnp.float32)
+    value = jax.tree.map(lambda leaf: leaf * g.astype(leaf.dtype),
+                         state.value)
+    return AccState(value=value, rows=state.rows * g, steps=state.steps,
+                    spec=state.spec)
+
+
+def finalize(state: AccState) -> Any:
+    """Collapse to the reduced value (identity / hi + lo / per-slot)."""
+    return strategy(state.spec).finalize(state.value)
+
+
+def rows_of(state: AccState) -> float:
+    """Effective row count as a host float (blocks on the scalar)."""
+    return float(jax.device_get(state.rows))
+
+
+def steps_of(state: AccState) -> int:
+    """Per-chip scan steps as a host int (feeds `streaming.eps_scale`)."""
+    return int(jax.device_get(state.steps))
+
+
+class SlidingWindow:
+    """Ring buffer of per-chunk states for sliding-window absorption.
+
+    Monoids have no inverse, so evicting the oldest chunk cannot subtract
+    it; instead the window keeps the last `window` chunk states and the
+    current window state is recomputed as a left fold of merges over the
+    ring — O(window) merges, each O(state size).  Chunks older than the
+    window fall off the deque and are garbage.
+
+    ``merge_fn`` defaults to `accstate.merge`; pass a domain merge (e.g.
+    `nystrom.normal_eq_merge`) to window richer state objects.
+    """
+
+    def __init__(self, window: int,
+                 merge_fn: Callable[[Any, Any], Any] | None = None):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.window = int(window)
+        self._merge = merge_fn if merge_fn is not None else merge
+        self._ring: deque = deque(maxlen=self.window)
+
+    def push(self, chunk: Any) -> None:
+        self._ring.append(chunk)
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    @property
+    def chunks(self) -> Iterable[Any]:
+        return tuple(self._ring)
+
+    def state(self) -> Any:
+        """Fold-merge of the chunks currently in the window."""
+        if not self._ring:
+            raise ValueError("empty window: push at least one chunk first")
+        it = iter(self._ring)
+        state = next(it)
+        for chunk in it:
+            state = self._merge(state, chunk)
+        return state

@@ -32,14 +32,15 @@ Scott's rule.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import streaming
+from repro.core import accstate, streaming
 
 Array = jax.Array
 
@@ -102,12 +103,13 @@ def _cic_stencil(frac: Array, weights: Array | None = None) -> Array:
 
 @functools.partial(jax.jit, static_argnames=("grid_size", "tile",
                                              "accumulator", "finalize",
-                                             "method"))
+                                             "method", "return_state"))
 def scatter_cic(points: Array, lo: Array, spacing: Array, grid_size: int,
                 *, weights: Array | None = None,
                 tile: int | None = None,
                 accumulator: str = "plain", finalize: bool = True,
-                method: str = "window"):
+                method: str = "window", init_state: Any = None,
+                return_state: bool = False):
     """Cloud-in-cell deposit of (weighted) points onto a (grid_size,)^d grid.
 
     ``method="window"`` (default): each point's whole (2,)^d stencil lands
@@ -132,7 +134,10 @@ def scatter_cic(points: Array, lo: Array, spacing: Array, grid_size: int,
     two-float (hi, lo) pair — each tile's deposit is materialized against a
     zero grid and folded in with an error-free two-sum; ``finalize=False``
     returns the accumulator state for the mesh psum in
-    `core.distributed.kde_binned_sharded_multi`.
+    `core.distributed.kde_binned_sharded_multi`.  ``init_state=`` deposits
+    INTO a previously returned raw state instead of a zero grid (the
+    incremental absorb of `DepositState`); ``return_state=True`` returns
+    the raw state.
     """
     n, d = points.shape
     if method not in ("window", "segment"):
@@ -176,13 +181,16 @@ def scatter_cic(points: Array, lo: Array, spacing: Array, grid_size: int,
     init = jnp.zeros((grid_size,) * d, dtype=points.dtype)
     if tile is None or tile >= n:
         # one-shot deposit: weights=None skips the stencil multiply entirely
-        state = acc.add(acc.init(init), (points, weights), combine)
+        start = acc.init(init) if init_state is None else init_state
+        state = acc.add(start, (points, weights), combine)
+        if return_state:
+            return state
         return acc.finalize(state) if finalize else state
     w = jnp.ones((n,), points.dtype) if weights is None else weights
     return streaming.tile_reduce(
         lambda pts, wt: (pts, wt), points, (w,), tile=tile, init=init,
         combine=combine, accumulator=accumulator, pad="zero",
-        finalize=finalize)
+        finalize=finalize, init_state=init_state, return_state=return_state)
 
 
 @functools.partial(jax.jit, static_argnames=("grid_size",))
@@ -230,6 +238,116 @@ def binned_bounds(query: Array, data: Array, h: Array) -> tuple[Array, Array]:
     lo = jnp.minimum(jnp.min(data, axis=0), jnp.min(query, axis=0)) - 4.0 * h
     hi = jnp.maximum(jnp.max(data, axis=0), jnp.max(query, axis=0)) + 4.0 * h
     return lo, hi
+
+
+# ------------------------------------------------------------ deposit state --
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DepositState:
+    """First-class CIC deposit state: a mergeable count grid + its geometry.
+
+    The deposit is bandwidth-independent on a fixed grid geometry (the
+    CalibrateStage shared-deposit contract), so ONE absorbed state serves
+    every bandwidth: `densities_from_state` re-runs only the O(g^d log g)
+    FFT smooth + gather per query/h.  Monoid ops mirror `NormalEqState`:
+    `deposit_init` / `deposit_absorb` / `deposit_merge` / `deposit_decay`
+    / `deposit_finalize`.  Points outside the frozen bounds clamp to the
+    boundary cells (`cic_prep`) — re-init with wider bounds if the stream
+    drifts past the fitted support.
+    """
+
+    acc: accstate.AccState      # value = (grid_size,)^d grid strategy state
+    lo: Array                   # (d,) grid origin
+    spacing: Array              # (d,) cell size
+    grid_size: int = 0          # static: cells per axis
+    tile: int | None = None     # static: deposit slab rows
+    accumulator: str = "plain"  # static
+    method: str = "window"      # static: scatter formulation
+    backend: str | None = None  # static: dispatch backend
+
+    def tree_flatten(self):
+        return ((self.acc, self.lo, self.spacing),
+                (self.grid_size, self.tile, self.accumulator, self.method,
+                 self.backend))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        acc, lo, spacing = leaves
+        grid_size, tile, accumulator, method, backend = aux
+        return cls(acc=acc, lo=lo, spacing=spacing, grid_size=grid_size,
+                   tile=tile, accumulator=accumulator, method=method,
+                   backend=backend)
+
+
+def deposit_init(lo: Array, hi: Array, grid_size: int, *,
+                 dtype=jnp.float32, tile: int | None = None,
+                 accumulator: str = "plain", method: str = "window",
+                 backend: str | None = None) -> DepositState:
+    """Zero deposit state on the [lo, hi] grid (kde_binned_multi geometry:
+    spacing = (hi - lo) / (grid_size - 1))."""
+    lo = jnp.asarray(lo, dtype)
+    d = lo.shape[0]
+    spacing = (jnp.asarray(hi, dtype) - lo) / (grid_size - 1)
+    zeros = jnp.zeros((grid_size,) * d, dtype)
+    return DepositState(acc=accstate.init(accumulator, zeros), lo=lo,
+                        spacing=spacing, grid_size=grid_size, tile=tile,
+                        accumulator=accumulator, method=method,
+                        backend=backend)
+
+
+def deposit_absorb(state: DepositState, points: Array,
+                   weights: Array | None = None) -> DepositState:
+    """Deposit a new point chunk into the grid — O(chunk * 2^d).
+
+    Routes through `kernels.dispatch.binned_scatter` so the backend knob
+    is honored; on the XLA path the deposit lands directly in the carried
+    state (a tile-aligned chain of absorbs is bit-equal to the one-shot
+    deposit), on Pallas the chunk grid is built fresh and merged.
+    """
+    from repro.kernels import dispatch  # deferred: core -> kernels
+
+    n = points.shape[0]
+    value = dispatch.binned_scatter(
+        points, state.lo, state.spacing, state.grid_size,
+        backend=state.backend, weights=weights, tile=state.tile,
+        accumulator=state.accumulator, method=state.method,
+        init_state=state.acc.value, return_state=True)
+    steps = 1 if state.tile is None else -(-n // min(state.tile, max(n, 1)))
+    acc = accstate.AccState(value=value, rows=state.acc.rows + n,
+                            steps=state.acc.steps + steps,
+                            spec=state.acc.spec)
+    return dataclasses.replace(state, acc=acc)
+
+
+def deposit_merge(a: DepositState, b: DepositState) -> DepositState:
+    """Combine two deposits built on the SAME grid geometry (caller's
+    contract, like `nystrom.normal_eq_merge`)."""
+    return dataclasses.replace(a, acc=accstate.merge(a.acc, b.acc))
+
+
+def deposit_decay(state: DepositState, gamma: float) -> DepositState:
+    """Exponential forgetting of the count grid ((hi, lo) domain)."""
+    return dataclasses.replace(state, acc=accstate.decay(state.acc, gamma))
+
+
+def deposit_finalize(state: DepositState) -> Array:
+    """Collapse to the (grid_size,)^d count grid."""
+    return accstate.finalize(state.acc)
+
+
+def densities_from_state(state: DepositState, query: Array,
+                         h: float | Array) -> Array:
+    """Densities at `query` from an absorbed deposit — the online twin of
+    `kde_binned` (normalized by the state's effective, possibly decayed,
+    row count)."""
+    d = state.lo.shape[0]
+    grid = deposit_finalize(state)
+    h = jnp.asarray(h, grid.dtype)
+    smooth = _fft_smooth(grid, state.spacing, h, state.grid_size, d)
+    out = gather_cic(smooth, query, state.lo, state.spacing, state.grid_size)
+    n_eff = jnp.maximum(state.acc.rows.astype(grid.dtype), 1.0)
+    return jnp.maximum(out, 0.0) / (n_eff * gaussian_norm(d, h))
 
 
 def kde_binned(

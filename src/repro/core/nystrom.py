@@ -28,12 +28,14 @@ Two solve paths:
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+import dataclasses
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import accstate
 from repro.core import precision as precision_mod
 from repro.core import streaming
 from repro.core.kernels import Kernel, kernel_matrix, sentinel_is_safe
@@ -311,7 +313,8 @@ def _resolve_predict_tile(tile: int | None, x_new: Array, xm: Array,
 def _gram_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array, *,
                     tile: int | None, autotuned: bool, backend: str | None,
                     interpret: bool | None, accumulator: str,
-                    precision: str = "fp32") -> tuple[Array, Array]:
+                    precision: str = "fp32",
+                    finalize: bool = True) -> tuple[Array, Array]:
     """The (G, rhs) accumulation behind `fit_streaming[_multi]`.
 
     When the tile came from the autotuner (`autotuned=True`, i.e. the caller
@@ -331,7 +334,8 @@ def _gram_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array, *,
             and jax.core.trace_state_clean()):
         from repro import tuning
         key = ("gram_normal_eq", kernel, x.shape, y.shape, xm.shape,
-               str(x.dtype), str(y.dtype), tile, accumulator, precision)
+               str(x.dtype), str(y.dtype), tile, accumulator, precision,
+               finalize)
         try:
             hash(key)
         except TypeError:   # kernel with array-valued params: stay eager
@@ -342,16 +346,17 @@ def _gram_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array, *,
                 lambda: lambda x_, y_, xm_: streaming_normal_eq(
                     kernel, x_, y_, xm_, tile=tile, backend=backend,
                     interpret=interpret, accumulator=accumulator,
-                    precision=precision))
+                    precision=precision, finalize=finalize))
             return fn(x, y, xm)
     return streaming_normal_eq(kernel, x, y, xm, tile=tile, backend=backend,
                                interpret=interpret, accumulator=accumulator,
-                               precision=precision)
+                               precision=precision, finalize=finalize)
 
 
 def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
                    *, tile: int | None = None, accumulator: str = "plain",
-                   finalize: bool = True,
+                   finalize: bool = True, init_state: Any = None,
+                   return_state: bool = False,
                    precision: str | None = "fp32") -> tuple[Array, Array]:
     """(K_nm^T K_nm, K_nm^T w) accumulated over `tile`-row slabs.
 
@@ -364,7 +369,10 @@ def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
     `gram` kernel computes the same quantity tile-fused on TPU.
     ``tile=None`` autotunes the slab size (`repro.tuning` — same numbers
     as passing the resolved integer explicitly).  `finalize=False` returns
-    the raw accumulator state for a mesh psum.
+    the raw accumulator state for a mesh psum; ``init_state=`` continues
+    the scan carry from a previously returned raw state (the incremental
+    absorb — a tile-aligned chain of these is bit-equal to one
+    uninterrupted fold, see `streaming.tile_reduce`).
 
     ``w`` may be (n,) or (n, k) — extra response columns ride the same
     pass (rhs matches: (m,) or (m, k)).  ``precision`` picks the
@@ -387,7 +395,9 @@ def scan_normal_eq(kernel: Kernel, x: Array, xm: Array, w: Array,
     init = (jnp.zeros((m, m), acc), jnp.zeros((m,) + w.shape[1:], acc))
     return streaming.tile_reduce(emit, x, (w.astype(acc),), tile=tile,
                                  init=init, accumulator=accumulator,
-                                 pad="sentinel", finalize=finalize)
+                                 pad="sentinel", finalize=finalize,
+                                 init_state=init_state,
+                                 return_state=return_state)
 
 
 def streaming_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array,
@@ -424,6 +434,160 @@ def streaming_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array,
                                  accumulator=accumulator, finalize=finalize)
 
 
+# ------------------------------------------------------- first-class state --
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NormalEqState:
+    """First-class normal-equation accumulator state (a jax pytree).
+
+    Bundles the raw (G, rhs) strategy state (`accstate.AccState` — rows
+    and per-chip scan steps ride along), the landmark set it was built
+    against, and the cached O(m^2) K_mm, plus the static execution knobs
+    every later absorb must reuse.  Monoid ops: `normal_eq_init` /
+    `normal_eq_absorb` / `normal_eq_merge` / `normal_eq_decay` /
+    `solve_from_state`.  All array members are leaves, so the state
+    round-trips through `checkpoint.Manager` and psums unchanged; the
+    exec knobs are static aux data.
+    """
+
+    acc: accstate.AccState      # value = raw ((m,m), (m,[k])) strategy state
+    landmarks: Array            # (m, d)
+    landmark_idx: Array         # (m,) indices into the ORIGINAL training set
+    k_mm: Array                 # (m, m) kernel Gram of the landmarks
+    tile: int | None = None
+    backend: str | None = None
+    interpret: bool | None = None
+    accumulator: str = "plain"
+    precision: str | None = "fp32"
+
+    def tree_flatten(self):
+        leaves = (self.acc, self.landmarks, self.landmark_idx, self.k_mm)
+        aux = (self.tile, self.backend, self.interpret, self.accumulator,
+               self.precision)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        acc, landmarks, landmark_idx, k_mm = leaves
+        tile, backend, interpret, accumulator, precision = aux
+        return cls(acc=acc, landmarks=landmarks, landmark_idx=landmark_idx,
+                   k_mm=k_mm, tile=tile, backend=backend, interpret=interpret,
+                   accumulator=accumulator, precision=precision)
+
+
+def normal_eq_init(kernel: Kernel, landmarks: Array,
+                   landmark_idx: Array | None = None, *,
+                   rhs_cols: int | None = None,
+                   dtype=jnp.float32,
+                   tile: int | None = None,
+                   backend: str | None = None,
+                   interpret: bool | None = None,
+                   accumulator: str = "plain",
+                   precision: str | None = "fp32") -> NormalEqState:
+    """The identity state for a fixed landmark set (zero G/rhs, zero rows).
+
+    ``rhs_cols=None`` sizes rhs as (m,) — the single-response fit;
+    an integer widens it to (m, rhs_cols) (the scored-moment stream).
+    ``tile=None`` defers tile resolution to each absorb (resolved per
+    chunk shape); pass the resolved integer to pin one plan for the
+    stream's lifetime — what `fit_streaming(..., return_state=True)` does.
+    """
+    _require_sentinel_safe(kernel)
+    m = landmarks.shape[0]
+    acc_dtype = jnp.promote_types(dtype, jnp.float32)
+    rhs_shape = (m,) if rhs_cols is None else (m, int(rhs_cols))
+    zeros = (jnp.zeros((m, m), acc_dtype), jnp.zeros(rhs_shape, acc_dtype))
+    if landmark_idx is None:
+        landmark_idx = jnp.arange(m)
+    return NormalEqState(
+        acc=accstate.init(accumulator, zeros),
+        landmarks=landmarks, landmark_idx=landmark_idx,
+        k_mm=kernel_matrix(kernel, landmarks).astype(acc_dtype),
+        tile=tile, backend=backend, interpret=interpret,
+        accumulator=accumulator, precision=precision)
+
+
+def normal_eq_absorb(kernel: Kernel, state: NormalEqState, x: Array,
+                     y: Array) -> NormalEqState:
+    """Fold a new (x, y) chunk into the state — O(chunk * m), old tiles
+    untouched.
+
+    On a single-device XLA stream the scan carry CONTINUES from the saved
+    state (`tile_reduce(init_state=...)`), so absorbing a stream in
+    tile-aligned chunks is bit-equal to one uninterrupted fold.  Under an
+    active mesh (or the Pallas backend, whose VMEM accumulator cannot be
+    seeded) the chunk is reduced fresh and merged in — same monoid, merge
+    tolerance instead of bit equality.
+    """
+    from repro.kernels import dispatch
+
+    _require_sentinel_safe(kernel)
+    xm = state.landmarks
+    tile, precision = _resolve_gram_exec(state.tile, state.precision, x, xm,
+                                         state.backend, state.accumulator)
+    n = x.shape[0]
+    single = (streaming.row_shard_count(x.shape) == 1
+              and dispatch.resolve(state.backend) == "xla")
+    if single:
+        value = scan_normal_eq(kernel, x, xm, y, tile=tile,
+                               accumulator=state.accumulator,
+                               precision=precision,
+                               init_state=state.acc.value, return_state=True)
+    else:
+        fresh = streaming_normal_eq(kernel, x, y, xm, tile=tile,
+                                    backend=state.backend,
+                                    interpret=state.interpret,
+                                    accumulator=state.accumulator,
+                                    finalize=False, precision=precision)
+        value = streaming.get(state.accumulator).merge(state.acc.value, fresh)
+    acc = accstate.AccState(
+        value=value, rows=state.acc.rows + n,
+        steps=state.acc.steps + _scan_steps(n, tile, x, state.backend),
+        spec=state.acc.spec)
+    return dataclasses.replace(state, acc=acc)
+
+
+def normal_eq_merge(a: NormalEqState, b: NormalEqState) -> NormalEqState:
+    """Combine two states built against the SAME landmark set (caller's
+    contract — landmark identity is not re-verified here, it would block
+    on device scalars inside hot loops)."""
+    return dataclasses.replace(a, acc=accstate.merge(a.acc, b.acc))
+
+
+def normal_eq_decay(state: NormalEqState, gamma: float) -> NormalEqState:
+    """Exponential forgetting in the (hi, lo) domain (`accstate.decay`)."""
+    return dataclasses.replace(state, acc=accstate.decay(state.acc, gamma))
+
+
+def solve_from_state(state: NormalEqState, lam: float, *,
+                     jitter: float = 1e-6,
+                     weights: Array | None = None) -> NystromFit:
+    """Finalize the accumulated (G, rhs) and re-run the O(m^3) solve.
+
+    This is the ONLY per-update cost a `partial_fit` pays beyond absorbing
+    the new tiles: n is the state's effective (possibly decayed) row count
+    and the truncation floor uses the absorbed per-chip step count, so a
+    state built by one uninterrupted fold solves bit-equal to the one-shot
+    `fit_streaming`.
+    """
+    g, rhs = accstate.finalize(state.acc)
+    if rhs.ndim != 1:
+        rhs = rhs[:, 0]
+    n = accstate.rows_of(state.acc)
+    steps = accstate.steps_of(state.acc)
+    k_mm = state.k_mm
+    if weights is not None:
+        g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
+    beta = solve_normal_eq(g, rhs, k_mm, n, lam, jitter=jitter,
+                           eps_scale=_eff_eps_scale(
+                               state.accumulator, steps, state.precision))
+    if weights is not None:
+        beta = weights.astype(beta.dtype) * beta
+    return NystromFit(beta=beta, landmarks=state.landmarks,
+                      landmark_idx=state.landmark_idx, lam=lam)
+
+
 def fit_streaming(
     kernel: Kernel,
     x: Array,
@@ -438,6 +602,7 @@ def fit_streaming(
     weights: Array | None = None,
     accumulator: str = "plain",
     precision: str | None = None,
+    return_state: bool = False,
 ) -> NystromFit:
     """`fit_from_landmarks` without ever materializing K_nm.
 
@@ -453,6 +618,14 @@ def fit_streaming(
     the Gram-contraction mode (`repro.core.precision`; None resolves it
     jointly with an autotuned tile, or to "fp32" when the tile is pinned)
     and scales the solve's truncation floor by `precision.EPS_SCALE`.
+
+    Internally this IS init + absorb + solve over a `NormalEqState`: the
+    one pass over x lands in first-class accumulator state (through the
+    same plan-keyed cached executable as before — the raw state is the
+    pre-finalize scan carry, and finalizing it outside is the identical
+    elementwise op), and the solve is `solve_from_state`.  Pass
+    ``return_state=True`` to also get the state back for incremental
+    `normal_eq_absorb` / `normal_eq_decay` updates — (fit, state) then.
     """
     _require_sentinel_safe(kernel)
     n = x.shape[0]
@@ -460,23 +633,22 @@ def fit_streaming(
     autotuned = tile is None
     tile, precision = _resolve_gram_exec(tile, precision, x, xm, backend,
                                          accumulator)
-    g, rhs = _gram_normal_eq(kernel, x, y, xm, tile=tile,
-                             autotuned=autotuned, backend=backend,
-                             interpret=interpret, accumulator=accumulator,
-                             precision=precision)
-    # k_mm is O(m^2) work — the core path keeps it in the input dtype, which
-    # the dense solve also uses (dtype parity matters more than MXU here).
-    k_mm = kernel_matrix(kernel, xm).astype(g.dtype)
-    if weights is not None:
-        g, rhs, k_mm = weighted_normal_eq(g, rhs, k_mm, weights)
-    beta = solve_normal_eq(g, rhs, k_mm, n, lam, jitter=jitter,
-                           eps_scale=_eff_eps_scale(
-                               accumulator, _scan_steps(n, tile, x, backend),
-                               precision))
-    if weights is not None:
-        beta = weights.astype(beta.dtype) * beta
-    return NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx,
-                      lam=lam)
+    raw = _gram_normal_eq(kernel, x, y, xm, tile=tile,
+                          autotuned=autotuned, backend=backend,
+                          interpret=interpret, accumulator=accumulator,
+                          precision=precision, finalize=False)
+    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    state = NormalEqState(
+        acc=accstate.wrap(accumulator, raw, rows=n,
+                          steps=_scan_steps(n, tile, x, backend)),
+        landmarks=xm, landmark_idx=landmark_idx,
+        # k_mm is O(m^2) work — the core path keeps it in the input dtype,
+        # which the dense solve also uses (dtype parity beats MXU here).
+        k_mm=kernel_matrix(kernel, xm).astype(acc_dtype),
+        tile=tile, backend=backend, interpret=interpret,
+        accumulator=accumulator, precision=precision)
+    fit_ = solve_from_state(state, lam, jitter=jitter, weights=weights)
+    return (fit_, state) if return_state else fit_
 
 
 def fit_streaming_multi(
@@ -543,6 +715,7 @@ def fit_streaming_scored(
     weights: Array | None = None,
     accumulator: str = "plain",
     precision: str | None = None,
+    return_state: bool = False,
 ) -> tuple[NystromFit, dict]:
     """`fit_streaming` + the in-sample score moments in ONE pass over x.
 
@@ -564,7 +737,9 @@ def fit_streaming_scored(
     predict-pass scores in tests/test_multi_reduce.py).
 
     Eager-only (host-computes t^T t); the pipeline's `evaluate()` is the
-    intended caller.
+    intended caller.  ``return_state=True`` appends a single-response
+    `NormalEqState` — the widened raw state with the extra score columns
+    sliced away — as a third element: (fit, moments, state).
     """
     _require_sentinel_safe(kernel)
     n = x.shape[0]
@@ -576,10 +751,11 @@ def fit_streaming_scored(
     if f_star is not None:
         cols.append(jnp.asarray(f_star, x.dtype))
     wmat = jnp.stack(cols, axis=1)                       # (n, 1 + r)
-    g, rr = _gram_normal_eq(kernel, x, wmat, xm, tile=tile,
-                            autotuned=autotuned, backend=backend,
-                            interpret=interpret, accumulator=accumulator,
-                            precision=precision)
+    raw = _gram_normal_eq(kernel, x, wmat, xm, tile=tile,
+                          autotuned=autotuned, backend=backend,
+                          interpret=interpret, accumulator=accumulator,
+                          precision=precision, finalize=False)
+    g, rr = streaming.get(accumulator).finalize(raw)
     rhs = rr[:, 0]
     y64 = np.asarray(y, np.float64)
     moments = {"g": g, "rhs_y": rr[:, 0], "n_eval": int(n),
@@ -601,7 +777,25 @@ def fit_streaming_scored(
         beta = weights.astype(beta.dtype) * beta
     fit_ = NystromFit(beta=beta, landmarks=xm, landmark_idx=landmark_idx,
                       lam=lam)
-    return fit_, moments
+    if not return_state:
+        return fit_, moments
+
+    def _col0(tree):
+        g_, rr_ = tree
+        return (g_, rr_[:, 0])
+
+    if streaming.get(accumulator).name == "compensated":
+        hi, lo = raw
+        value = (_col0(hi), _col0(lo))
+    else:
+        value = _col0(raw)
+    state = NormalEqState(
+        acc=accstate.wrap(accumulator, value, rows=n,
+                          steps=_scan_steps(n, tile, x, backend)),
+        landmarks=xm, landmark_idx=landmark_idx, k_mm=k_mm,
+        tile=tile, backend=backend, interpret=interpret,
+        accumulator=accumulator, precision=precision)
+    return fit_, moments, state
 
 
 def val_mse_streaming_multi(kernels: Sequence[Kernel],

@@ -92,6 +92,12 @@ class PlainAccumulator:
     def add(self, state, update, combine):
         return combine(state, update)
 
+    def merge(self, a, b):
+        # IEEE addition is commutative (not associative), so merge order
+        # of a PAIR is bit-stable; chains of merges are order-sensitive
+        # like any float sum.
+        return _tree_add(a, b)
+
     def psum(self, state, axes):
         return jax.lax.psum(state, axes)
 
@@ -124,6 +130,18 @@ class CompensatedAccumulator:
             lambda h, d, ss: (h - (ss - (ss - h))) + (d - (ss - h)), hi,
             delta, s)
         return (s, jax.tree.map(jnp.add, lo, err))
+
+    def merge(self, a, b):
+        # Error-free pair merge: the hi parts combine through TwoSum and
+        # the rounding error lands in lo alongside both carried errors —
+        # merging two compensated states loses nothing beyond what a
+        # continued single stream would have lost.
+        hi_a, lo_a = a
+        hi_b, lo_b = b
+        s = jax.tree.map(lambda x, y: two_sum(x, y)[0], hi_a, hi_b)
+        err = jax.tree.map(lambda x, y: two_sum(x, y)[1], hi_a, hi_b)
+        lo = jax.tree.map(lambda la, lb, e: la + lb + e, lo_a, lo_b, err)
+        return (s, lo)
 
     def psum(self, state, axes):
         # hi and lo reduce SEPARATELY: the pair crosses the collective
@@ -173,6 +191,11 @@ class MultiAccumulator:
         return tuple(
             a.add(s, u, c) for a, s, u, c in
             zip(self.accumulators, state, update, self.combines))
+
+    def merge(self, a, b):
+        return tuple(
+            acc.merge(sa, sb) for acc, sa, sb in
+            zip(self.accumulators, a, b))
 
     def psum(self, state, axes):
         return tuple(
@@ -240,6 +263,8 @@ def tile_reduce(
     accumulator: str | Any = "plain",
     pad: str = "sentinel",
     finalize: bool = True,
+    init_state: Any = None,
+    return_state: bool = False,
 ) -> Any:
     """Reduce `tile`-row slabs of x (+ row-aligned aux arrays) into `init`.
 
@@ -252,18 +277,24 @@ def tile_reduce(
     rows deposit nothing).  aux arrays are always zero-padded.
 
     ``accumulator`` picks the strategy (module docstring).  With
-    ``finalize=False`` the raw accumulator state is returned — the form
-    `mesh_reduce` psums across chips.  A whole-array slab still runs as a
-    one-step `lax.scan`: the scan body is compiled as one fused computation
-    exactly like the historical hand-rolled loops, which is what makes
-    plain mode bit-equal to them (an eager shortcut would round FMA-fused
+    ``finalize=False`` (or ``return_state=True``) the raw accumulator
+    state is returned — the form `mesh_reduce` psums across chips and
+    `repro.core.accstate` wraps as a first-class value.  With
+    ``init_state=`` the scan carry STARTS from a previously returned raw
+    state instead of `acc.init(init)`: absorbing a stream in tile-aligned
+    chunks is then the same op sequence as one uninterrupted fold, so a
+    chained absorb is bit-equal to the one-shot reduction (the incremental
+    `partial_fit` contract).  A whole-array slab still runs as a one-step
+    `lax.scan`: the scan body is compiled as one fused computation exactly
+    like the historical hand-rolled loops, which is what makes plain mode
+    bit-equal to them (an eager shortcut would round FMA-fused
     subexpressions differently on CPU).
     """
     acc = get(accumulator)
     combine = combine if combine is not None else _tree_add
     n = x.shape[0]
     t = min(tile, n) if tile else n
-    state = acc.init(init)
+    state = acc.init(init) if init_state is None else init_state
     np_ = round_up(n, t)
     slabs = (_tiles(x, t, np_, pad),) + tuple(
         _tiles(a, t, np_, "zero") for a in aux)
@@ -272,6 +303,8 @@ def tile_reduce(
         return acc.add(carry, emit(*slab), combine), None
 
     state, _ = jax.lax.scan(step, state, slabs)
+    if return_state:
+        return state
     return acc.finalize(state) if finalize else state
 
 
@@ -286,6 +319,8 @@ def multi_reduce(
     combines: Sequence[Callable | None] | None = None,
     pad: str = "sentinel",
     finalize: bool = True,
+    init_state: Any = None,
+    return_state: bool = False,
 ) -> Any:
     """One tile scan driving N pluggable accumulators at once.
 
@@ -293,16 +328,18 @@ def multi_reduce(
     typically sharing expensive intermediates (the kernel tile) across
     slots.  Slot i is accumulated by ``accumulators[i]`` (default: all
     plain) folding with ``combines[i]`` (default: leafwise add) into
-    ``inits[i]``.  Everything else (padding, scan, finalize semantics)
-    matches `tile_reduce`; with ``finalize=False`` the returned state is a
-    tuple of per-slot states — the form `mesh_reduce` psums when given the
-    same `MultiAccumulator` instance.
+    ``inits[i]``.  Everything else (padding, scan, finalize semantics,
+    ``init_state=``/``return_state=`` state threading) matches
+    `tile_reduce`; with ``finalize=False`` the returned state is a tuple
+    of per-slot states — the form `mesh_reduce` psums when given the same
+    `MultiAccumulator` instance.
     """
     accs = tuple(accumulators) if accumulators is not None else (
         ("plain",) * len(tuple(inits)))
     multi = MultiAccumulator(accs, combines)
     return tile_reduce(emit, x, aux, tile=tile, init=tuple(inits),
-                       accumulator=multi, pad=pad, finalize=finalize)
+                       accumulator=multi, pad=pad, finalize=finalize,
+                       init_state=init_state, return_state=return_state)
 
 
 def tile_map(
@@ -366,6 +403,8 @@ def mesh_reduce(
     *,
     accumulator: str | Any = "plain",
     finalize: bool = True,
+    init_state: Any = None,
+    return_state: bool = False,
 ) -> Any:
     """Row-sharded reduction: psum `local`'s accumulator state across chips.
 
@@ -375,6 +414,10 @@ def mesh_reduce(
     device reduces its local row slab and the state is psum-reduced — for
     "compensated" the (hi, lo) pair crosses the collective un-collapsed.
     Otherwise `local` runs once on the full arrays (transparent no-op).
+
+    ``init_state=`` is a prior raw state merged in AFTER the collective
+    (threading it through the psum would multiply the replicated prior by
+    the chip count); ``return_state=True`` returns the raw merged state.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -383,16 +426,20 @@ def mesh_reduce(
     mesh, axes = _active_rows(row_args[0].shape)
     if mesh is None:
         state = local(*row_args, *rep_args)
-        return acc.finalize(state) if finalize else state
-    ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+    else:
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
 
-    def body(*args):
-        return acc.psum(local(*args), ax_tuple)
+        def body(*args):
+            return acc.psum(local(*args), ax_tuple)
 
-    in_specs = tuple(_row_spec(axes, a.ndim) for a in row_args) + tuple(
-        P(*([None] * a.ndim)) for a in rep_args)
-    state = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P())(
-        *row_args, *rep_args)
+        in_specs = tuple(_row_spec(axes, a.ndim) for a in row_args) + tuple(
+            P(*([None] * a.ndim)) for a in rep_args)
+        state = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P())(
+            *row_args, *rep_args)
+    if init_state is not None:
+        state = acc.merge(init_state, state)
+    if return_state:
+        return state
     return acc.finalize(state) if finalize else state
 
 

@@ -90,6 +90,7 @@ def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
                     w: Array, *, backend: str | None = None,
                     tile: int | None = None, interpret: bool | None = None,
                     accumulator: str = "plain", finalize: bool = True,
+                    init_state=None, return_state: bool = False,
                     precision: str | None = None, **kw) -> tuple:
     """(K_nm^T K_nm, K_nm^T w) through the resolved backend.
 
@@ -112,7 +113,16 @@ def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
     anyway (tile/bm/bn None) and to the historical "fp32" when the caller
     pinned the tiling explicitly — an explicit-tile call stays bit-equal
     to pre-precision code.
+
+    ``init_state=`` continues a prior raw state (first-class accumulator
+    state, `repro.core.accstate`): the XLA scan threads it through the
+    carry (tile-aligned chains are bit-equal to one fold); the Pallas
+    kernel's VMEM accumulator cannot be seeded, so the chunk is reduced
+    fresh and merged via the strategy's `merge`.  ``return_state=True``
+    returns the raw state on either backend.
     """
+    from repro.core import streaming as streaming_mod
+
     if resolve(backend) == "pallas":
         from repro.kernels.gram import ops as gram_ops
         if "bm" not in kw or "bn" not in kw:
@@ -123,10 +133,17 @@ def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
             kw.setdefault("bn", plan.bn)
             if precision is None:
                 precision = plan.precision
-        return gram_ops.gram_matrix(kernel, x, y, w, interpret=interpret,
-                                    accumulator=accumulator,
-                                    finalize=finalize,
-                                    precision=precision or "fp32", **kw)
+        want_raw = return_state or not finalize or init_state is not None
+        state = gram_ops.gram_matrix(kernel, x, y, w, interpret=interpret,
+                                     accumulator=accumulator,
+                                     finalize=not want_raw,
+                                     precision=precision or "fp32", **kw)
+        if init_state is not None:
+            state = streaming_mod.get(accumulator).merge(init_state, state)
+        if return_state or not finalize:
+            return state
+        return streaming_mod.get(accumulator).finalize(state) \
+            if want_raw else state
     from repro.core import nystrom
     if tile is None:
         plan = resolve_plan("gram", x.shape[0], y.shape[0], x.shape[1],
@@ -137,6 +154,8 @@ def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,
             precision = plan.precision
     return nystrom.scan_normal_eq(kernel, x, y, w, tile=tile,
                                   accumulator=accumulator, finalize=finalize,
+                                  init_state=init_state,
+                                  return_state=return_state,
                                   precision=precision or "fp32")
 
 
@@ -144,7 +163,9 @@ def binned_scatter(data: Array, lo: Array, spacing: Array, grid_size: int,
                    *, backend: str | None = None, weights: Array | None = None,
                    tile: int | None = None, bm: int | None = None,
                    interpret: bool | None = None,
-                   accumulator: str = "plain", finalize: bool = True):
+                   accumulator: str = "plain", finalize: bool = True,
+                   init_state=None, return_state: bool = False,
+                   method: str = "window"):
     """Cloud-in-cell deposit onto a (grid_size,)^d grid, resolved backend.
 
     The deposit stage of the binned KDE (`repro.core.kde.kde_binned`).  The
@@ -167,20 +188,34 @@ def binned_scatter(data: Array, lo: Array, spacing: Array, grid_size: int,
 
     The deposit is bandwidth-independent (only the grid geometry enters),
     which is why `kde.kde_binned_multi` / the CalibrateStage bandwidth sweep
-    call this ONCE per grid and amortize it across every h candidate — keep
-    that contract if you add state to either backend.
+    call this ONCE per grid and amortize it across every h candidate — the
+    contract `kde.DepositState` makes first-class (state carries geometry,
+    never bandwidth).  ``init_state=``/``return_state=`` thread raw
+    accumulator state exactly like `gram_accumulate`: carried through the
+    XLA scan, fresh-then-merged on Pallas.  ``method`` picks the XLA
+    scatter formulation (`kde.scatter_cic`; ignored on Pallas, which is
+    always segment-reduce).
     """
+    from repro.core import streaming as streaming_mod
+
     if resolve(backend) == "pallas":
         from repro.kernels.kde_binned import ops as kb_ops
         if bm is None:
             bm = resolve_plan("deposit", data.shape[0], grid_size,
                               data.shape[1], dtype=data.dtype,
                               backend="pallas", accumulator=accumulator).bm
-        return kb_ops.binned_scatter(data, lo, spacing, grid_size,
-                                     weights=weights, bm=bm,
-                                     interpret=interpret,
-                                     accumulator=accumulator,
-                                     finalize=finalize)
+        want_raw = return_state or not finalize or init_state is not None
+        state = kb_ops.binned_scatter(data, lo, spacing, grid_size,
+                                      weights=weights, bm=bm,
+                                      interpret=interpret,
+                                      accumulator=accumulator,
+                                      finalize=not want_raw)
+        if init_state is not None:
+            state = streaming_mod.get(accumulator).merge(init_state, state)
+        if return_state or not finalize:
+            return state
+        return streaming_mod.get(accumulator).finalize(state) \
+            if want_raw else state
     from repro.core import kde as core_kde
     if tile is None:
         tile = resolve_tile("deposit", data.shape[0], grid_size,
@@ -188,4 +223,6 @@ def binned_scatter(data: Array, lo: Array, spacing: Array, grid_size: int,
                             accumulator=accumulator)
     return core_kde.scatter_cic(data, lo, spacing, grid_size,
                                 weights=weights, tile=tile,
-                                accumulator=accumulator, finalize=finalize)
+                                accumulator=accumulator, finalize=finalize,
+                                method=method, init_state=init_state,
+                                return_state=return_state)

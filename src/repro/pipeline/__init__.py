@@ -14,6 +14,11 @@ from repro.pipeline.api import (  # noqa: F401
     PipelineState,
     SAKRRPipeline,
 )
+from repro.pipeline.online import (  # noqa: F401
+    OnlineLandmarks,
+    OnlineLandmarkStage,
+    OnlineState,
+)
 from repro.pipeline.stages import (  # noqa: F401
     CalibrateStage,
     DensityStage,

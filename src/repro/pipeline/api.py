@@ -48,6 +48,7 @@ subsets) get the trajectory for free.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional, Sequence
 
 import jax
@@ -64,7 +65,17 @@ class PipelineConfig:
 
     lam / num_landmarks default to the paper's rates when None:
     lam = 0.075 n^{-2/3}, m = 5 n^{1/3} (clipped to >= 8).
+
+    ``SCHEMA_VERSION`` stamps every `to_dict` payload.  `from_dict` refuses
+    a dict stamped with a DIFFERENT version (a persisted artifact from an
+    incompatible library revision must fail loudly at load, not mis-predict
+    silently at serve time); an unstamped dict is accepted as the
+    pre-versioning legacy layout.  `repro.serving.ServableKRR` persists
+    exactly this dict inside its npz bundle, so the stamp rides through the
+    serving save/load round-trip too.
     """
+
+    SCHEMA_VERSION = 2
 
     # kernel
     kernel_kind: str = "matern"       # "matern" | "gaussian"
@@ -130,7 +141,8 @@ class PipelineConfig:
         return max(8, int(5 * n ** (1.0 / 3.0)))
 
     def to_dict(self) -> dict[str, Any]:
-        return dataclasses.asdict(self)
+        return dict(dataclasses.asdict(self),
+                    schema_version=self.SCHEMA_VERSION)
 
     # tuple-typed fields that JSON round-trips as lists; from_dict restores
     # the tuples so the frozen dataclass stays hashable and == its pre-dump
@@ -140,6 +152,15 @@ class PipelineConfig:
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "PipelineConfig":
+        d = dict(d)
+        version = d.pop("schema_version", None)
+        if version is not None and version != cls.SCHEMA_VERSION:
+            raise ValueError(
+                f"PipelineConfig schema_version mismatch: the dict was "
+                f"written at version {version!r} but this library reads "
+                f"version {cls.SCHEMA_VERSION}; re-export the config (or "
+                "the serving artifact carrying it) with a matching library "
+                "revision")
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = sorted(set(d) - known)
         if unknown:
@@ -147,7 +168,6 @@ class PipelineConfig:
                 f"unknown PipelineConfig key(s) {unknown}; known fields: "
                 f"{sorted(known)} (a config dict from a newer version of "
                 "this library cannot be loaded here)")
-        d = dict(d)
         for name in cls._TUPLE_FIELDS:
             if d.get(name) is not None:
                 d[name] = tuple(float(v) for v in d[name])
@@ -195,6 +215,7 @@ class SAKRRPipeline:
                        else stages_mod.default_stages(self.config))
         self.state: PipelineState | None = None
         self._ctx: stages_mod.StageContext | None = None
+        self._online = None   # pipeline.online.OnlineState, lazy
 
     # ------------------------------------------------------------------ fit --
     def _make_context(self, x: Array, y: Array,
@@ -208,6 +229,7 @@ class SAKRRPipeline:
 
     def _snapshot(self, ctx: stages_mod.StageContext) -> None:
         self._ctx = ctx
+        self._online = None   # a fresh fold supersedes any online state
         self.state = PipelineState(
             n=ctx.n, d=ctx.d, lam=ctx.lam, num_landmarks=ctx.num_landmarks,
             densities=ctx.densities, leverage=ctx.leverage, fit=ctx.fit,
@@ -232,6 +254,60 @@ class SAKRRPipeline:
         ctx = self._make_context(x, y)
         self._run(self.stages, ctx)
         self._snapshot(ctx)
+        return self
+
+    # ---------------------------------------------------------- partial_fit --
+    @property
+    def online(self):
+        """The live `repro.pipeline.online.OnlineState` (lazy: seeded from
+        the banked SolveStage state on first `partial_fit`)."""
+        if self._online is None:
+            from repro.pipeline import online as online_mod
+            if self._ctx is None:
+                raise RuntimeError("call fit(x, y) before going online")
+            solve = self._solve_stage()
+            self._online = online_mod.from_context(
+                self._ctx,
+                weighted=solve.weighted if solve is not None else False)
+        return self._online
+
+    def partial_fit(self, x_new: Array, y_new: Array, *,
+                    decay: float | None = None,
+                    window: int | None = None) -> "SAKRRPipeline":
+        """Absorb new rows and re-solve WITHOUT re-streaming the old data.
+
+        The SolveStage banked its raw normal-equation accumulator state at
+        fit time (`repro.core.accstate` — the finalize of the stream it
+        already ran, deferred for free), so appending k rows costs
+        O(k · m) for the Gram absorb plus ONE O(m^3) solve — independent
+        of the rows already absorbed.  On a single-device XLA stream the
+        absorb continues the scan carry, so a tile-aligned sequence of
+        `partial_fit` calls reproduces the one-shot `fit` beta bit-for-bit
+        under the plain accumulator (and within the compensated tolerance
+        otherwise).
+
+        ``decay=gamma`` exponentially forgets the past before absorbing
+        (drifting streams); ``window=k`` keeps a ring of the last k chunks
+        and refolds them (bounded-horizon streams).  The landmark set is
+        FROZEN — pair with `repro.pipeline.online.OnlineLandmarks` when
+        the dictionary itself must track the drift.
+
+        Updates `state.fit` / the live context in place, so `predict`
+        serves the refreshed model immediately.  Returns self.
+        """
+        st = self._fitted_state()
+        if st.fit is None:
+            raise RuntimeError("the fitted stage list produced no solve; "
+                               "include a SolveStage to partial_fit")
+        t0 = time.perf_counter()
+        online = self.online
+        online.absorb(self.kernel, jax.numpy.asarray(x_new),
+                      jax.numpy.asarray(y_new), decay=decay, window=window)
+        fit_ = online.solve_fit(self._ctx.lam, jitter=self.config.jitter)
+        jax.block_until_ready(fit_.beta)
+        self._ctx.fit = st.fit = fit_
+        self._ctx.solve_state = online.solve
+        st.seconds["partial_fit"] = time.perf_counter() - t0
         return self
 
     # ------------------------------------------------------------- evaluate --

@@ -84,6 +84,11 @@ class StageContext:
     # predict-then-score path (fuse_scoring defaults False).
     fuse_scoring: bool = False
     score_moments: Optional[dict] = None
+    # first-class accumulator state (repro.core.accstate): SolveStage banks
+    # the raw normal-equation fold here for free (same stream, finalize
+    # deferred), so `SAKRRPipeline.partial_fit` can absorb new tiles and
+    # re-solve in O(tile * m) without ever re-streaming the old rows
+    solve_state: Optional[nystrom.NormalEqState] = None
     seconds: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def require(self, *names: str) -> None:
@@ -305,16 +310,18 @@ class SolveStage(Stage):
         weights = ctx.sample_weights if self.weighted else None
         backend, tile, accumulator, precision = resolve_exec(self, cfg)
         if self._fuse(ctx):
-            ctx.fit, ctx.score_moments = nystrom.fit_streaming_scored(
-                ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
-                f_star=ctx.f_star, tile=tile, backend=backend,
-                jitter=cfg.jitter, weights=weights, accumulator=accumulator,
-                precision=precision)
+            ctx.fit, ctx.score_moments, ctx.solve_state = (
+                nystrom.fit_streaming_scored(
+                    ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
+                    f_star=ctx.f_star, tile=tile, backend=backend,
+                    jitter=cfg.jitter, weights=weights,
+                    accumulator=accumulator, precision=precision,
+                    return_state=True))
             return
-        ctx.fit = nystrom.fit_streaming(
+        ctx.fit, ctx.solve_state = nystrom.fit_streaming(
             ctx.kernel, ctx.x, ctx.y, ctx.lam, ctx.landmark_idx,
             tile=tile, backend=backend, jitter=cfg.jitter, weights=weights,
-            accumulator=accumulator, precision=precision)
+            accumulator=accumulator, precision=precision, return_state=True)
 
 
 class PredictStage(Stage):
@@ -650,7 +657,7 @@ class CalibrateStage(Stage):
         ctx.bandwidth = best["h"]
         ctx.densities = ctx.leverage = ctx.landmark_idx = None
         ctx.sample_weights = ctx.fit = ctx.predictions = ctx.scores = None
-        ctx.score_moments = None
+        ctx.score_moments = ctx.solve_state = None
 
 
 def default_stages(config: Any = None) -> list[Stage]:

@@ -43,7 +43,10 @@ from repro.core.kernels import Kernel, kernel_matrix
 
 Array = jax.Array
 
-FORMAT_VERSION = 1
+# v2: the embedded PipelineConfig dict is schema-versioned
+# (PipelineConfig.SCHEMA_VERSION rides inside pipeline_config) and
+# artifacts support in-place refresh() for online hot swaps
+FORMAT_VERSION = 2
 
 
 def _whitened_factor(kernel: Kernel, landmarks: Array,
@@ -131,6 +134,35 @@ class ServableKRR:
         return nystrom.predict_streaming(self.kernel, self.as_fit(), x,
                                          tile=self.tile, backend=self.backend,
                                          precision=self.precision)
+
+    # ------------------------------------------------------------ refresh --
+    def refresh(self, fit: nystrom.NystromFit, *,
+                bandwidth: float | None = None,
+                n_fit: int | None = None) -> "ServableKRR":
+        """A NEW artifact serving an updated fit — the online-ingestion
+        bridge: `SAKRRPipeline.partial_fit` (or an
+        `online.OnlineLandmarks.refit`) produces the fit, `refresh` wraps
+        it, and `ServingEngine.hot_swap` swaps it in without dropping
+        in-flight requests.
+
+        When the landmark set is unchanged (the `partial_fit` fast path)
+        the frozen O(m^3) whitener is reused; a changed dictionary
+        (SQUEAK add/drop) recomputes it once here, off the request path.
+        The execution knobs (backend / tile / precision) and grid bounds
+        carry over unchanged.
+        """
+        same_landmarks = (
+            fit.landmarks.shape == self.landmarks.shape
+            and bool(jnp.all(fit.landmarks == self.landmarks)))
+        whitener = (self.k_mm_whitener if same_landmarks else
+                    _whitened_factor(self.kernel, fit.landmarks,
+                                     self.config.jitter))
+        return dataclasses.replace(
+            self, lam=float(fit.lam), beta=fit.beta,
+            landmarks=fit.landmarks, landmark_idx=fit.landmark_idx,
+            k_mm_whitener=whitener,
+            bandwidth=self.bandwidth if bandwidth is None else bandwidth,
+            n_fit=self.n_fit if n_fit is None else int(n_fit))
 
     def in_support(self, x: Array) -> Array:
         """(k,) bool: query inside the fitted KDE grid bounds (all dims)."""

@@ -57,7 +57,8 @@ class EngineStats:
     batches: int = 0            # jit dispatches
     rows: int = 0               # real (unpadded) rows served
     padded_rows: int = 0        # rows incl. bucket padding
-    compiles: int = 0           # distinct buckets traced
+    compiles: int = 0           # distinct (artifact, bucket) pairs traced
+    swaps: int = 0              # hot_swap() artifact replacements
 
     @property
     def occupancy(self) -> float:
@@ -72,16 +73,25 @@ class ServingEngine:
                  max_delay_s: float = 0.0, min_bucket: int = 8):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
-        self.artifact = artifact
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_s)
         self.min_bucket = int(min_bucket)
         self.stats = EngineStats()
         self._dtype = np.asarray(artifact.landmarks).dtype
         self._queue: queue.Queue[_Request] = queue.Queue()
-        self._jits: dict[int, object] = {}
+        # the served model is an (artifact, per-bucket-jit-cache) PAIR that
+        # swaps as ONE reference (`hot_swap`): a dispatch reads it once, so
+        # a batch never mixes one artifact's weights with another's jit —
+        # and the GIL makes the single attribute store/load atomic, no lock
+        # on the request path
+        self._active: tuple[ServableKRR, dict[int, object]] = (artifact, {})
         self._worker: threading.Thread | None = None
         self._running = False
+
+    @property
+    def artifact(self) -> ServableKRR:
+        """The artifact new batches are served from (live view)."""
+        return self._active[0]
 
     # ---------------------------------------------------------- lifecycle --
     def start(self) -> "ServingEngine":
@@ -113,6 +123,30 @@ class ServingEngine:
     def __exit__(self, *exc) -> None:
         self.stop()
 
+    def hot_swap(self, artifact: ServableKRR) -> None:
+        """Replace the served artifact WITHOUT stopping the engine.
+
+        Swaps the (artifact, jit-cache) pair in one atomic reference
+        store.  In-flight and already-dispatched batches finish against
+        the artifact they were packed with; every batch dispatched after
+        the swap serves the new one — no request is dropped, reordered,
+        or mixed across artifacts.  The new artifact must be
+        shape-compatible (same input dim and dtype); typically it comes
+        from `ServableKRR.refresh` after a `partial_fit` /
+        `OnlineLandmarks.refit`.  Callable from any thread.
+        """
+        if artifact.dim != self.artifact.dim:
+            raise ValueError(
+                f"hot_swap artifact has input dim {artifact.dim}; the "
+                f"engine serves dim {self.artifact.dim}")
+        if np.asarray(artifact.landmarks).dtype != self._dtype:
+            raise ValueError(
+                f"hot_swap artifact has dtype "
+                f"{np.asarray(artifact.landmarks).dtype}; the engine "
+                f"serves {self._dtype}")
+        self._active = (artifact, {})
+        self.stats.swaps += 1
+
     def warm(self, buckets: tuple[int, ...] | None = None) -> None:
         """Pre-compile the bucketed jit cache (off the request path)."""
         if buckets is None:
@@ -120,10 +154,11 @@ class ServingEngine:
                             (2 ** p for p in range(16))
                             if self.min_bucket <= b <= self.max_batch)
             buckets = buckets or (self._bucket(1),)
-        d = self.artifact.dim
+        active = self._active
+        d = active[0].dim
         for b in buckets:
             x = jnp.zeros((b, d), dtype=self._dtype)
-            jax.block_until_ready(self._jit_for(b)(x))
+            jax.block_until_ready(self._jit_for(active, b)(x))
 
     # ------------------------------------------------------------- submit --
     def submit(self, rows) -> Future:
@@ -154,12 +189,13 @@ class ServingEngine:
             b *= 2
         return b
 
-    def _jit_for(self, bucket: int):
-        fn = self._jits.get(bucket)
+    def _jit_for(self, active: tuple[ServableKRR, dict], bucket: int):
+        artifact, jits = active
+        fn = jits.get(bucket)
         if fn is None:
             donate = (0,) if jax.default_backend() != "cpu" else ()
-            fn = jax.jit(self.artifact.predict, donate_argnums=donate)
-            self._jits[bucket] = fn
+            fn = jax.jit(artifact.predict, donate_argnums=donate)
+            jits[bucket] = fn
             self.stats.compiles += 1
         return fn
 
@@ -206,15 +242,16 @@ class ServingEngine:
 
     def _dispatch(self, items: list[_Request]):
         """Pack, pad to the bucket, device_put, launch jit (non-blocking)."""
+        active = self._active        # ONE read: weights + jits stay paired
         rows = int(sum(r.rows.shape[0] for r in items))
         bucket = self._bucket(rows)
-        batch = np.zeros((bucket, self.artifact.dim), dtype=self._dtype)
+        batch = np.zeros((bucket, active[0].dim), dtype=self._dtype)
         off = 0
         for r in items:
             k = r.rows.shape[0]
             batch[off:off + k] = r.rows
             off += k
-        out = self._jit_for(bucket)(jax.device_put(batch))
+        out = self._jit_for(active, bucket)(jax.device_put(batch))
         self.stats.batches += 1
         self.stats.rows += rows
         self.stats.padded_rows += bucket

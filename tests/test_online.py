@@ -1,0 +1,286 @@
+"""Online ingestion across the pipeline stack: `partial_fit`, decayed /
+windowed absorption, checkpointed accumulator state (tear-safe resume),
+online landmark maintenance, and schema-version gating.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as mgr_mod
+from repro.core import accstate, kde, nystrom
+from repro.data import krr_data
+from repro.pipeline import (FixedLandmarkStage, PipelineConfig,
+                            SAKRRPipeline, SolveStage)
+from repro.pipeline import online as online_mod
+
+N, D, TILE, LAM = 4096, 2, 256, 1e-4
+
+
+@pytest.fixture(scope="module")
+def data():
+    return krr_data.bimodal(jax.random.PRNGKey(0), N, D)
+
+
+def _fixed_idx(n_fit: int, m: int = 64, seed: int = 7):
+    idx = np.random.default_rng(seed).choice(n_fit, m, replace=False)
+    return jnp.asarray(np.sort(idx), jnp.int32)
+
+
+def _pipe(accumulator="plain", stages=None):
+    cfg = PipelineConfig(tile=TILE, lam=LAM, accumulator=accumulator)
+    return SAKRRPipeline(cfg, stages=stages)
+
+
+# ------------------------------------------------------------ partial_fit --
+
+@pytest.mark.parametrize("accumulator", ["plain", "compensated"])
+def test_partial_fit_is_bit_equal_to_one_shot_fit(data, accumulator):
+    """Tile-aligned partial_fit chunks reproduce the one-shot fit beta
+    bit-for-bit (the absorb continues the scan carry)."""
+    idx = _fixed_idx(N // 2)
+    pipe = _pipe(accumulator, [FixedLandmarkStage(idx), SolveStage()])
+    pipe.fit(data.x[:N // 2], data.y[:N // 2])
+    for lo in range(N // 2, N, 1024):
+        pipe.partial_fit(data.x[lo:lo + 1024], data.y[lo:lo + 1024])
+    ref = _pipe(accumulator, [FixedLandmarkStage(idx), SolveStage()])
+    ref.fit(data.x, data.y)
+    np.testing.assert_array_equal(np.asarray(pipe.state.fit.beta),
+                                  np.asarray(ref.state.fit.beta))
+    assert pipe.online.rows == N
+
+
+def test_partial_fit_through_default_stages_and_predict(data):
+    """The full KDE->leverage->sample->solve fold banks its state too, and
+    predict serves the refreshed beta immediately."""
+    pipe = _pipe().fit(data.x[:N // 2], data.y[:N // 2])
+    before = np.asarray(pipe.predict(data.x[:16]))
+    pipe.partial_fit(data.x[N // 2:], data.y[N // 2:])
+    after = np.asarray(pipe.predict(data.x[:16]))
+    assert not np.array_equal(before, after)
+    assert "partial_fit" in pipe.state.seconds
+    assert pipe.online.rows == N
+
+
+def test_partial_fit_requires_a_fit(data):
+    pipe = _pipe()
+    with pytest.raises(RuntimeError, match="fit"):
+        pipe.partial_fit(data.x[:64], data.y[:64])
+
+
+def test_partial_fit_decay_tracks_effective_rows(data):
+    pipe = _pipe().fit(data.x[:2048], data.y[:2048])
+    pipe.partial_fit(data.x[2048:2560], data.y[2048:2560], decay=0.5)
+    assert pipe.online.rows == pytest.approx(2048 * 0.5 + 512)
+
+
+def test_partial_fit_window_evicts_oldest(data):
+    pipe = _pipe().fit(data.x[:2048], data.y[:2048])
+    pipe.partial_fit(data.x[2048:3072], data.y[2048:3072], window=2)
+    # ring: [fit(2048), chunk(1024)] -> rows 3072
+    assert pipe.online.rows == 3072
+    pipe.partial_fit(data.x[3072:], data.y[3072:], window=2)
+    # ring: [chunk(1024), chunk(1024)] -> the initial fit fell out
+    assert pipe.online.rows == 2048
+    # windowed state == one fold over exactly the windowed rows (merging
+    # independent chunk states reassociates, so tolerance not bitwise)
+    win = pipe.online.solve
+    ref = nystrom.normal_eq_init(pipe.kernel, win.landmarks, tile=TILE)
+    ref = nystrom.normal_eq_absorb(pipe.kernel, ref,
+                                   data.x[2048:], data.y[2048:])
+    g_win, _ = accstate.finalize(win.acc)
+    g_ref, _ = accstate.finalize(ref.acc)
+    np.testing.assert_allclose(np.asarray(g_win), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_decay_and_window_are_mutually_exclusive(data):
+    pipe = _pipe().fit(data.x[:1024], data.y[:1024])
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        pipe.partial_fit(data.x[1024:1280], data.y[1024:1280],
+                         decay=0.9, window=2)
+
+
+def test_online_deposit_tracks_densities(data):
+    """A deposit-backed OnlineState reproduces the binned KDE densities of
+    the absorbed rows."""
+    pipe = _pipe().fit(data.x[:2048], data.y[:2048])
+    state = online_mod.from_context(pipe._ctx, deposit=True)
+    h = kde.scott_bandwidth(data.x[:2048])
+    dens = np.asarray(kde.densities_from_state(state.deposit,
+                                               data.x[:2048], h))
+    ref = np.asarray(kde.estimate_densities(data.x[:2048], h=h,
+                                            method="binned"))
+    np.testing.assert_allclose(dens, ref, rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------------- checkpoint --
+
+def _chunks(lo, hi, step):
+    return [(a, min(a + step, hi)) for a in range(lo, hi, step)]
+
+
+def test_checkpoint_save_kill_restore_continues_bitwise(data, tmp_path):
+    """save -> (simulated) kill -> restore -> continue reproduces the
+    uninterrupted stream's beta bit-for-bit, and a torn newer checkpoint
+    (state.npz without MANIFEST) is ignored by restore."""
+    idx = _fixed_idx(1024)
+    pipe = _pipe(stages=[FixedLandmarkStage(idx), SolveStage()])
+    pipe.fit(data.x[:1024], data.y[:1024])
+    mgr = mgr_mod.Manager(str(tmp_path), async_write=True)
+
+    for step, (a, b) in enumerate(_chunks(1024, 2048, 512)):
+        pipe.partial_fit(data.x[a:b], data.y[a:b])
+        mgr.save(step, pipe.online.checkpoint_state())
+    mgr.wait()
+
+    # a kill mid-write leaves state.npz without MANIFEST: torn, ignored
+    torn = tmp_path / "step_99"
+    torn.mkdir()
+    np.savez(torn / "state.npz", junk=np.zeros(3))
+    assert mgr.latest_step() == 1
+
+    # "restart": rebuild the pre-stream fit (same op sequence), restore the
+    # checkpointed accumulators, continue the stream
+    pipe2 = _pipe(stages=[FixedLandmarkStage(idx), SolveStage()])
+    pipe2.fit(data.x[:1024], data.y[:1024])
+    target = pipe2.online.checkpoint_state()
+    restored = mgr.restore(mgr.latest_step(), target)
+    pipe2.online.restore_checkpoint_state(restored)
+    for a, b in _chunks(2048, N, 512):
+        pipe2.partial_fit(data.x[a:b], data.y[a:b])
+
+    # oracle: the same stream uninterrupted
+    pipe3 = _pipe(stages=[FixedLandmarkStage(idx), SolveStage()])
+    pipe3.fit(data.x[:1024], data.y[:1024])
+    for a, b in _chunks(1024, N, 512):
+        pipe3.partial_fit(data.x[a:b], data.y[a:b])
+    np.testing.assert_array_equal(np.asarray(pipe2.state.fit.beta),
+                                  np.asarray(pipe3.state.fit.beta))
+    assert pipe2.online.rows == N
+
+
+def test_save_joins_previous_async_write_before_flatten(tmp_path,
+                                                        monkeypatch):
+    """Regression: `save` must wait() for the in-flight async write BEFORE
+    flattening the new state — flatten-first overlaps the host copy with
+    the previous writer thread, so a crash strands a half-written
+    checkpoint and an in-place-updated state races the old writer."""
+    events = []
+    orig_write = mgr_mod.Manager._write
+    orig_flatten = mgr_mod._flatten
+
+    def slow_write(self, step, flat):
+        events.append(("write_start", step))
+        time.sleep(0.25)
+        orig_write(self, step, flat)
+        events.append(("write_end", step))
+
+    def recording_flatten(tree):
+        events.append(("flatten",))
+        return orig_flatten(tree)
+
+    monkeypatch.setattr(mgr_mod.Manager, "_write", slow_write)
+    monkeypatch.setattr(mgr_mod, "_flatten", recording_flatten)
+    mgr = mgr_mod.Manager(str(tmp_path), async_write=True)
+    state = {"a": jnp.arange(4.0)}
+    mgr.save(0, state)
+    mgr.save(1, state)
+    mgr.wait()
+    # the second flatten must come strictly after step 0's write finished
+    flattens = [i for i, e in enumerate(events) if e == ("flatten",)]
+    assert len(flattens) == 2
+    assert events.index(("write_end", 0)) < flattens[1]
+    assert sorted(mgr._steps()) == [0, 1]
+
+
+def test_torn_checkpoint_dirs_are_invisible(tmp_path):
+    mgr = mgr_mod.Manager(str(tmp_path), async_write=False)
+    assert mgr.latest_step() is None
+    (tmp_path / "step_3").mkdir()
+    np.savez(tmp_path / "step_3" / "state.npz", a=np.zeros(2))
+    (tmp_path / "step_4.tmp").mkdir()       # interrupted os.replace staging
+    assert mgr.latest_step() is None
+    mgr.save(5, {"a": jnp.zeros(2)})
+    assert mgr.latest_step() == 5
+
+
+# -------------------------------------------------------- online landmarks --
+
+def test_online_landmarks_admit_and_drop_under_shift(data):
+    pipe = _pipe().fit(data.x[:2048], data.y[:2048])
+    ol = online_mod.seed_landmarks(pipe)
+    m0 = len(ol)
+    assert np.all(ol.p > 0) and np.all(ol.p <= 1)
+    assert np.all(ol.u < ol.p)          # seeded members are all alive
+    shifted = krr_data.bimodal(jax.random.PRNGKey(5), 512, D, offset=4.0)
+    changed = ol.update(shifted.x, shifted.y)
+    # far-from-dictionary points have RLS ~ 1 -> some must be admitted
+    assert changed and ol.changes >= 1 and ol.updates == 1
+    assert ol.n == pytest.approx(2048 + 512)
+    fit = ol.refit()
+    assert fit.beta.shape == (len(ol),)
+    pred = np.asarray(nystrom.predict_streaming(pipe.kernel, fit,
+                                                shifted.x[:64]))
+    assert np.all(np.isfinite(pred))
+    ds2 = krr_data.bimodal(jax.random.PRNGKey(6), 512, D)
+    ol.update(ds2.x, ds2.y)
+    # every surviving member's retained uniform sits below its probability
+    assert np.all(ol.u < ol.p)
+    assert len(ol.idx) == len(ol.p) == len(ol.u) == len(ol)
+    del m0
+
+
+def test_online_landmark_stage_rides_a_fold(data):
+    stage = online_mod.OnlineLandmarkStage()
+    from repro.pipeline import default_stages
+    pipe = SAKRRPipeline(PipelineConfig(tile=TILE, lam=LAM),
+                         stages=default_stages() + [stage])
+    pipe.fit(data.x[:1024], data.y[:1024])
+    assert stage.landmarks is not None
+    assert len(stage.landmarks) == pipe.state.num_landmarks
+    assert "online_landmarks" in pipe.state.seconds
+
+
+# ---------------------------------------------------------- schema version --
+
+def test_config_dict_round_trips_with_schema_version():
+    cfg = PipelineConfig(nu=2.5, tile=512)
+    d = cfg.to_dict()
+    assert d["schema_version"] == PipelineConfig.SCHEMA_VERSION
+    assert PipelineConfig.from_dict(d) == cfg
+
+
+def test_config_from_dict_rejects_version_mismatch():
+    d = PipelineConfig().to_dict()
+    d["schema_version"] = PipelineConfig.SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema_version mismatch"):
+        PipelineConfig.from_dict(d)
+
+
+def test_config_from_dict_accepts_legacy_unstamped_dict():
+    d = PipelineConfig(nu=0.5).to_dict()
+    d.pop("schema_version")
+    assert PipelineConfig.from_dict(d).nu == 0.5
+
+
+def test_servable_bundle_rejects_stale_format_version(data, tmp_path):
+    from repro.serving import ServableKRR
+
+    pipe = _pipe().fit(data.x[:1024], data.y[:1024])
+    art = ServableKRR.freeze(pipe)
+    path = art.save(str(tmp_path / "model"))
+    # rewrite the embedded meta header to a stale version
+    import json
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"].tobytes()).decode())
+        arrays = {k: z[k] for k in z.files if k != "__meta__"}
+    meta["format_version"] = 1
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+    with pytest.raises(ValueError, match="format_version"):
+        ServableKRR.load(path)

@@ -131,6 +131,92 @@ def test_engine_threaded_smoke_matches_reference(fitted):
     assert eng.stats.compiles <= 4      # pow2 buckets 8..32 + warm only
 
 
+def test_refresh_reuses_whitener_and_serves_new_fit(fitted):
+    pipe, art, q = fitted
+    fit = pipe.state.fit
+    art2 = art.refresh(fit._replace(beta=fit.beta * 2.0))
+    # unchanged landmark set: the frozen O(m^3) whitener is reused as-is
+    assert art2.k_mm_whitener is art.k_mm_whitener
+    np.testing.assert_allclose(np.asarray(art2.predict(q)),
+                               2.0 * np.asarray(art.predict(q)),
+                               rtol=1e-6, atol=1e-6)
+    # changed dictionary (SQUEAK drop): whitener recomputed at new shape
+    fit3 = fit._replace(beta=fit.beta[:-1], landmarks=fit.landmarks[:-1],
+                        landmark_idx=fit.landmark_idx[:-1])
+    art3 = art.refresh(fit3)
+    assert art3.k_mm_whitener.shape == (M - 1, M - 1)
+    assert art3.num_landmarks == M - 1
+
+
+def test_hot_swap_validates_shape_compatibility(fitted):
+    import dataclasses
+
+    _, art, _ = fitted
+    eng = ServingEngine(art)
+    bad = dataclasses.replace(art, landmarks=jnp.zeros((M, D + 1)))
+    with pytest.raises(ValueError, match="dim"):
+        eng.hot_swap(bad)
+    assert eng.stats.swaps == 0
+
+
+def test_hot_swap_under_load_serves_exactly_one_artifact(fitted):
+    """4 producer threads while the main thread hot-swaps repeatedly:
+    every response matches EXACTLY one of the two artifacts (batches never
+    mix weights across a swap), and stats count the swaps."""
+    import time
+
+    pipe, art, q = fitted
+    fit = pipe.state.fit
+    art2 = art.refresh(fit._replace(beta=fit.beta * 2.0))
+    ref1 = np.asarray(art.predict(q))
+    ref2 = np.asarray(art2.predict(q))
+    # rows where the two artifacts are unambiguously distinguishable
+    idx = np.nonzero(np.abs(ref1 - ref2) > 1e-3)[0]
+    assert len(idx) >= 20
+    errs: list[AssertionError] = []
+    hits = [0, 0]
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def producer(p):
+        try:
+            first_pass = True
+            while first_pass or not stop.is_set():
+                first_pass = False
+                for i in idx[p::4]:
+                    out = float(eng.predict(np.asarray(q[int(i)])))
+                    is1 = abs(out - ref1[i]) < 1e-5
+                    is2 = abs(out - ref2[i]) < 1e-5
+                    assert is1 != is2, (out, ref1[i], ref2[i])
+                    with lock:
+                        hits[0 if is1 else 1] += 1
+        except AssertionError as e:        # surface across the thread edge
+            errs.append(e)
+
+    with ServingEngine(art, max_batch=32) as eng:
+        eng.warm()
+        # deterministic pre-swap check: the seeded artifact is served
+        i0 = int(idx[0])
+        assert abs(float(eng.predict(np.asarray(q[i0]))) - ref1[i0]) < 1e-5
+        threads = [threading.Thread(target=producer, args=(p,))
+                   for p in range(4)]
+        for t in threads:
+            t.start()
+        for target in (art2, art, art2, art, art2):
+            time.sleep(0.05)
+            eng.hot_swap(target)
+        stop.set()
+        for t in threads:
+            t.join()
+        # deterministic post-swap check: the last swapped artifact serves
+        assert abs(float(eng.predict(np.asarray(q[i0]))) - ref2[i0]) < 1e-5
+    assert not errs, errs[0]
+    assert eng.stats.swaps == 5
+    # every threaded response resolved to exactly one artifact
+    assert sum(hits) > 0
+    assert eng.artifact is art2
+
+
 def test_engine_submit_validates_and_requires_start(fitted):
     _, art, _ = fitted
     eng = ServingEngine(art)
