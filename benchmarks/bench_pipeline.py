@@ -667,6 +667,229 @@ def calibrate_bench(n: int = 16_384, seed: int = 0) -> list[dict]:
     return [rec]
 
 
+# --------------------------------------------------------------- multimodel --
+
+def _mesh2d_calibrate_record(n: int) -> dict:
+    """Forced-4-device subprocess: the calibrate sweep's per-h KDE and
+    multi-lam solve under a (2, 2) (data, model) mesh vs the 1D replicated
+    baseline — wall-clock for both plus the per-h bit-equality flag (the
+    2D path must match the 1D data-mesh path with the same data-shard
+    count exactly).  A subprocess because jax pins the host device count
+    at backend init."""
+    import subprocess
+    import sys
+    import textwrap
+    body = f"""
+        import json, time
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import distributed as dist, nystrom
+        from repro.core.kernels import Gaussian, kernel_matrix
+        from repro.distributed import sharding as shd
+        from repro.launch import mesh as mesh_lib
+
+        n = {int(n)}
+        x = jax.random.normal(jax.random.PRNGKey(0), (n, 3), jnp.float32)
+        hs = [0.15, 0.25, 0.4, 0.65]
+        lam_grid = [1e-5, 1e-4, 1e-3, 1e-2]
+        kern = Gaussian(1.0)
+        mesh1_2 = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+        mesh1_4 = jax.make_mesh((4,), ("data",))
+        mesh2 = mesh_lib.make_local_mesh_2d(model_parallelism=2)
+
+        def kde_sweep():
+            return jax.block_until_ready(
+                dist.kde_binned_sharded_multi(x, hs, grid_size=64))
+
+        idx = jax.random.choice(jax.random.PRNGKey(1), n, (64,),
+                                replace=False)
+        xm = x[idx]
+        k_nm = kernel_matrix(kern, x, xm)
+        g = (k_nm.T @ k_nm).astype(jnp.float32)
+        rhs = k_nm.T @ x[:, 0]
+        k_mm = kernel_matrix(kern, xm)
+
+        def solve_sweep():
+            return jax.block_until_ready(
+                nystrom.solve_normal_eq_multi(g, rhs, k_mm, n, lam_grid))
+
+        def timed(mesh):
+            with mesh, shd.activate(mesh):
+                kde_sweep(); solve_sweep()          # jit warm
+                t0 = time.perf_counter(); kde_sweep()
+                kde_s = time.perf_counter() - t0
+                t0 = time.perf_counter(); solve_sweep()
+                solve_s = time.perf_counter() - t0
+                return kde_s, solve_s
+
+        # bit parity: identical data-shard count (2) on both sides
+        with mesh1_2, shd.activate(mesh1_2):
+            kde_ref, solve_ref = np.asarray(kde_sweep()), \\
+                np.asarray(solve_sweep())
+        with mesh2, shd.activate(mesh2):
+            kde_2d, solve_2d = np.asarray(kde_sweep()), \\
+                np.asarray(solve_sweep())
+        kde1_s, solve1_s = timed(mesh1_4)   # 1D: per-h work replicated
+        kde2_s, solve2_s = timed(mesh2)     # 2D: per-h work model-sharded
+        print("MM2D " + json.dumps({{
+            "per_h_bit_equal": bool((kde_ref == kde_2d).all()),
+            "per_lam_bit_equal": bool((solve_ref == solve_2d).all()),
+            "kde_sweep_seconds_1d": round(kde1_s, 4),
+            "kde_sweep_seconds_2d": round(kde2_s, 4),
+            "solve_sweep_seconds_1d": round(solve1_s, 4),
+            "solve_sweep_seconds_2d": round(solve2_s, 4)}}))
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(os.path.dirname(
+                       os.path.abspath(__file__))), "src")]
+                   + ([os.environ["PYTHONPATH"]]
+                      if "PYTHONPATH" in os.environ else [])))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError(f"mesh2d calibrate bench failed:\n"
+                           f"{out.stderr[-3000:]}")
+    line = next(ln for ln in out.stdout.splitlines() if ln.startswith("MM2D"))
+    rec = json.loads(line[len("MM2D "):])
+    rec.update(section="pipeline_multimodel", kind="calibrate_mesh2d",
+               n=int(n), num_h=4, num_lams=4, devices="2x2 forced host")
+    return rec
+
+
+def multimodel_bench(n: int = 16_384, seed: int = 0) -> list[dict]:
+    """Many-model batched fit economics + 2D-mesh calibrate sweep numbers.
+
+    For B in {16, 256} tenant models (shared x, per-model y/lam/landmark
+    set): wall-clock of ONE `nystrom.fit_streaming_batched` pass vs the
+    sequential per-model `fit_streaming` python loop (both jit-warmed at
+    their autotuned tiles, best-of-3 wall-clock), with per-model parity at
+    a matched explicit tile — the batched path must be a pure
+    reorganization of the same arithmetic, just without paying the row
+    stream B times.  The B=256 speedup is the acceptance headline (>= 5x).
+
+    Parity is reported at three levels because the raw coefficient vector
+    is NOT determined to fp32 reduction-order precision at this
+    conditioning: the whitened solve amplifies one-ulp Gram differences
+    ~1e6-fold (measured: g matches to ~1e-7 rel between the two paths, yet
+    betas move ~1e-1 — and the LOOP PATH AGAINST ITSELF at two tile sizes
+    moves ~1e-2, the recorded `loop_self_beta_rel_err` yardstick).  So the
+    record carries (a) `beta_max_rel_err` with that same-arithmetic
+    yardstick next to it, (b) `pred_max_rel_err` — function-space parity,
+    which IS well-determined — and (c) `val_mse_max_rel_err` per-model
+    risk parity.  A forced-4-device subprocess then records the calibrate
+    sweep's (2, 2)-mesh timing and per-h/per-lam bit-equality vs the 1D
+    path (`_mesh2d_calibrate_record`).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    data = krr_data.bimodal(jax.random.PRNGKey(seed), n, d=3)
+    cfg = PipelineConfig(nu=1.5)
+    kern = cfg.build_kernel()
+    lam0 = cfg.resolve_lam(n)
+    m = 16                              # small per-tenant models: the
+    # batched win is per-model dispatch amortization, so the target regime
+    # is many tiny tenant fits (m=16 landmarks) over one shared row stream
+    n_val = 2_048
+    tile = 2_048                        # matched tile: same scan-step count
+    x_tr, x_val = data.x[n_val:], data.x[:n_val]
+    n_tr = n - n_val
+    rng = np.random.default_rng(seed)
+    records = []
+    for big in (16, 256):
+        # per-tenant targets: shared signal, per-model scale + noise
+        scales = jnp.asarray(rng.uniform(0.5, 2.0, size=(big, 1)),
+                             jnp.float32)
+        noise = jnp.asarray(rng.normal(scale=0.1, size=(big, n_tr)),
+                            jnp.float32)
+        ys = scales * data.y[n_val:][None, :] + noise
+        ys_val = scales * data.y[:n_val][None, :]
+        lams = jnp.asarray(rng.uniform(0.5, 2.0, size=(big,)) * lam0,
+                           jnp.float32)
+        lsets = jnp.asarray(
+            np.stack([rng.choice(n_tr, size=m, replace=False)
+                      for _ in range(big)]))
+
+        # timing: BOTH paths at their autotuned best (tile=None) — the
+        # production comparison a tenant-serving deployment would make.
+        # Best-of-3 per path: single-shot wall-clock on a shared CPU host
+        # swings ~20% run to run, and min-of-repeats is the standard way to
+        # strip scheduler noise from a throughput comparison.
+        jax.block_until_ready(nystrom.fit_streaming_batched(
+            kern, x_tr, ys, lams, lsets).beta)                 # jit warm
+        jax.block_until_ready(nystrom.fit_streaming(
+            kern, x_tr, ys[0], float(lams[0]), lsets[0]).beta)  # jit warm
+        batched_s = float("inf")
+        loop_s = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(nystrom.fit_streaming_batched(
+                kern, x_tr, ys, lams, lsets).beta)
+            batched_s = min(batched_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            for b in range(big):
+                jax.block_until_ready(nystrom.fit_streaming(
+                    kern, x_tr, ys[b], float(lams[b]), lsets[b]).beta)
+            loop_s = min(loop_s, time.perf_counter() - t0)
+        speedup = loop_s / max(batched_s, 1e-9)
+
+        # parity: matched explicit tile so both paths run the same
+        # scan-step count (see docstring for the three levels)
+        fit_b = nystrom.fit_streaming_batched(kern, x_tr, ys, lams, lsets,
+                                              tile=tile)
+        fits = [nystrom.fit_streaming(kern, x_tr, ys[b], float(lams[b]),
+                                      lsets[b], tile=tile)
+                for b in range(big)]
+        beta_err = max(
+            float(jnp.max(jnp.abs(fits[b].beta - fit_b.beta[b])) /
+                  (jnp.max(jnp.abs(fits[b].beta)) + 1e-30))
+            for b in range(big))
+        self_fit = nystrom.fit_streaming(kern, x_tr, ys[0], float(lams[0]),
+                                         lsets[0], tile=tile // 2)
+        self_err = float(
+            jnp.max(jnp.abs(self_fit.beta - fits[0].beta)) /
+            (jnp.max(jnp.abs(fits[0].beta)) + 1e-30))
+        preds_b = nystrom.predict_streaming_batched(kern, fit_b, x_val,
+                                                    tile=tile)
+        preds_l = jnp.stack([
+            nystrom.predict_streaming(kern, fits[b], x_val, tile=tile)
+            for b in range(big)])
+        pred_err = float(jnp.max(jnp.abs(preds_b - preds_l)) /
+                         jnp.max(jnp.abs(preds_l)))
+        mse_b = np.asarray(jnp.mean((preds_b - ys_val) ** 2, axis=1))
+        mse_l = np.asarray(jnp.mean((preds_l - ys_val) ** 2, axis=1))
+        mse_err = float(np.max(np.abs(mse_b - mse_l) /
+                               np.maximum(mse_l, 1e-30)))
+        rec = {
+            "section": "pipeline_multimodel", "kind": "batched_fit",
+            "n": n_tr, "num_models": big, "m": m, "tile": tile,
+            "batched_fit_seconds": round(batched_s, 4),
+            "loop_fit_seconds": round(loop_s, 4),
+            "batched_speedup": round(speedup, 2),
+            "beta_max_rel_err": beta_err,
+            "loop_self_beta_rel_err": self_err,
+            "pred_max_rel_err": pred_err,
+            "val_mse_max_rel_err": mse_err,
+        }
+        records.append(rec)
+        print(f"B={big:4d} models (n={n_tr}, m={m}): batched "
+              f"{batched_s:.3f}s vs loop {loop_s:.3f}s -> {speedup:.1f}x "
+              f"(beta {beta_err:.1e} vs self-yardstick {self_err:.1e}, "
+              f"pred {pred_err:.1e}, val-mse {mse_err:.1e})")
+
+    rec2d = _mesh2d_calibrate_record(min(n, 8_192))
+    records.append(rec2d)
+    print(f"2D-mesh calibrate sweep (n={rec2d['n']}): per-h bit-equal "
+          f"{rec2d['per_h_bit_equal']}, per-lam bit-equal "
+          f"{rec2d['per_lam_bit_equal']}; kde {rec2d['kde_sweep_seconds_1d']}"
+          f"s (1D) vs {rec2d['kde_sweep_seconds_2d']}s (2x2), solve "
+          f"{rec2d['solve_sweep_seconds_1d']}s vs "
+          f"{rec2d['solve_sweep_seconds_2d']}s")
+    return records
+
+
 # ------------------------------------------------------------------ compare --
 
 def compare_methods(n: int = 16_384, m: int | None = None,
@@ -754,8 +977,11 @@ def main(json_out: str | None = "BENCH_pipeline.json",
          stages: list[str] | None = None, compare: bool = False,
          calibrate: bool = False, accumulator: bool = False,
          autotune: bool = False, precision: bool = False,
-         online: bool = False) -> None:
-    if online:
+         online: bool = False, multimodel: bool = False) -> None:
+    if multimodel:
+        print("\n## pipeline multimodel (batched many-tenant fits + 2D mesh)")
+        records = multimodel_bench(n=n_only or 16_384)
+    elif online:
         print("\n## pipeline online (partial_fit vs refit + drift tracking)")
         records = online_bench(n=n_only or 262_144)
     elif precision:
@@ -828,10 +1054,17 @@ if __name__ == "__main__":
                          "refit wall-clock, plus frozen vs decayed vs "
                          "SQUEAK drift tracking on stationary and shifting "
                          "streams (default n=262144)")
+    ap.add_argument("--multimodel", action="store_true",
+                    help="many-model batched KRR: fit_streaming_batched vs "
+                         "the per-model python loop at B in {16, 256} "
+                         "(wall-clock + per-model parity), plus the "
+                         "forced-4-device 2D-mesh calibrate sweep timing "
+                         "and bit-equality record")
     ap.add_argument("--json", default="BENCH_pipeline.json")
     args = ap.parse_args()
     main(json_out=args.json or None, n_max=args.n_max, n_only=args.n,
          stages=args.stages.split(",") if args.stages else None,
          compare=args.compare, calibrate=args.calibrate,
          accumulator=args.accumulator, autotune=args.autotune,
-         precision=args.precision, online=args.online)
+         precision=args.precision, online=args.online,
+         multimodel=args.multimodel)

@@ -136,6 +136,24 @@ def merge(a: AccState, b: AccState) -> AccState:
                     spec=a.spec)
 
 
+def psum(state: AccState, axes) -> AccState:
+    """All-reduce a state across the given mesh axes (inside shard_map).
+
+    2D-mesh contract: callers pass the DATA axes only — the model axis of
+    a (data, model) mesh shards independent work and must never reduce.
+    Value leaves cross through the strategy's psum (the compensated
+    (hi, lo) pair un-collapsed, per `streaming.CompensatedAccumulator`);
+    ``rows`` sums (each chip absorbed a disjoint row slab); ``steps``
+    takes the max — it is a PER-CHIP error-budget count, and summing it
+    across chips would overstate the compensated floor's step budget.
+    """
+    return AccState(
+        value=strategy(state.spec).psum(state.value, axes),
+        rows=jax.lax.psum(state.rows, axes),
+        steps=jax.lax.pmax(state.steps, axes),
+        spec=state.spec)
+
+
 def decay(state: AccState, gamma: float) -> AccState:
     """Exponential forgetting: scale every value leaf by `gamma`.
 

@@ -115,8 +115,8 @@ def kde_binned_sharded_multi(x: Array, hs, *, grid_size: int = 96,
     (`kernels.dispatch.binned_scatter` — the engine-tiled XLA scatter or the
     Pallas `kde_binned` kernel per `backend`, O(tile 2^d) transient per
     chip) into a local copy of the (small, replicated) grid -> psum the
-    accumulator STATE across all mesh axes (the `repro.core.streaming`
-    strategy owns the collective: the compensated (hi, lo) pair crosses it
+    accumulator STATE across the mesh (the `repro.core.streaming` strategy
+    owns the collective: the compensated (hi, lo) pair crosses it
     un-collapsed) -> per-bandwidth FFT smoothing + purely local multilinear
     gather.  The deposit and the grid psum are bandwidth-independent and run
     ONCE for the whole sweep — the mesh half of the CalibrateStage contract
@@ -124,6 +124,20 @@ def kde_binned_sharded_multi(x: Array, hs, *, grid_size: int = 96,
     O(tile + g^d); the only collective is the one grid psum.  Bounds
     (lo, hi) must be static for jit; pass data bounds or rely on the
     caller's normalisation (default [-5, 5]^d covers normalised designs).
+
+    2D (data x model) meshes: when the active rules map the "models"
+    logical axis to a mesh axis that divides H (and "rows" divides n), the
+    rows shard over the DATA axes only, the grid psums over data only, and
+    the H bandwidths shard over the MODEL axis — each model-chip smooths
+    and gathers only its H/M candidates instead of every chip redundantly
+    running the whole (H, g^d) FFT sweep (the VMEM/grid-resolution ceiling
+    ROADMAP item 5 names).  The deposit is replicated across model chips
+    (it is the cheap, bandwidth-independent part); per-h outputs are
+    bit-equal to the 1D data-mesh path with the same data-shard count —
+    the psum has the same participants and the per-h smooth/gather is the
+    same op sequence on a bandwidth sliced from a device array.  On a 1D
+    mesh (no "models"-mapped axis) the historical all-axes row sharding is
+    unchanged.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -142,7 +156,7 @@ def kde_binned_sharded_multi(x: Array, hs, *, grid_size: int = 96,
     spacing = (hi - lo) / (grid_size - 1)
     acc = streaming.get(accumulator)
 
-    def body(x_loc, *, psum_axes=()):
+    def deposit(x_loc, psum_axes):
         from repro.kernels import dispatch
         state = dispatch.binned_scatter(x_loc, lo, spacing, grid_size,
                                         backend=backend, tile=tile,
@@ -150,19 +164,41 @@ def kde_binned_sharded_multi(x: Array, hs, *, grid_size: int = 96,
                                         finalize=False)
         if psum_axes:   # only meaningful inside shard_map; ONE psum per sweep
             state = acc.psum(state, psum_axes)
-        grid = acc.finalize(state)
-        outs = []
-        for h in hs:
-            smooth = core_kde._fft_smooth(grid, spacing,
-                                          jnp.asarray(h, x.dtype),
-                                          grid_size, d)
-            out = core_kde.gather_cic(smooth, x_loc, lo, spacing, grid_size)
-            outs.append(jnp.maximum(out, 0.0)
-                        / (n * core_kde.gaussian_norm(d, h)))
-        return jnp.stack(outs)
+        return acc.finalize(state)
 
-    if act is None or n % act.mesh.devices.size != 0:
-        return body(x)   # single-device (or non-dividing n): no collective
+    def smooth_gather(grid, x_loc, h):
+        # the shared per-h op sequence (`core.kde.smooth_gather`): same
+        # traced program whether h is a python float (1D path) or a device
+        # scalar sliced from the model-sharded bandwidth array (2D path)
+        return core_kde.smooth_gather(grid, x_loc, h, lo=lo, spacing=spacing,
+                                      grid_size=grid_size, d=d, n=n)
+
+    def body(x_loc, *, psum_axes=()):
+        grid = deposit(x_loc, psum_axes)
+        return jnp.stack([smooth_gather(grid, x_loc, h) for h in hs])
+
+    if act is None:
+        return body(x)   # single-device: no collective
+    data_axes = act.spec(("rows", None), x.shape)[0]
+    model_axes = act.spec(("models",), (len(hs),))[0]
+    if model_axes is not None and data_axes is not None:
+        # 2D path: rows over data, bandwidths over model.  The h subset is
+        # an INPUT sliced by shard_map (in_spec P(model)), so each chip's
+        # per-h loop runs the same traced-ops sequence as the 1D path.
+        data_tuple = ((data_axes,) if isinstance(data_axes, str)
+                      else tuple(data_axes))
+        hs_arr = jnp.asarray(hs, x.dtype)
+
+        def body2d(x_loc, hs_loc):
+            grid = deposit(x_loc, data_tuple)
+            return jnp.stack([smooth_gather(grid, x_loc, hs_loc[i])
+                              for i in range(hs_loc.shape[0])])
+
+        return shard_map(body2d, mesh=act.mesh,
+                         in_specs=(P(data_axes, None), P(model_axes)),
+                         out_specs=P(model_axes, data_axes))(x, hs_arr)
+    if n % act.mesh.devices.size != 0:
+        return body(x)   # non-dividing n: no collective
     axes = tuple(act.mesh.axis_names)
     return shard_map(functools.partial(body, psum_axes=axes), mesh=act.mesh,
                      in_specs=P(axes, None),

@@ -240,6 +240,27 @@ def binned_bounds(query: Array, data: Array, h: Array) -> tuple[Array, Array]:
     return lo, hi
 
 
+def smooth_gather(grid: Array, query: Array, h: Array, *, lo: Array,
+                  spacing: Array, grid_size: int, d: int, n: Array) -> Array:
+    """One bandwidth's densities from a deposited count grid: FFT smooth ->
+    CIC gather -> clamp + 1/(n * (2 pi h^2)^{d/2}) normalization.
+
+    THE per-h op sequence of every binned-KDE consumer (`kde_binned_multi`,
+    `densities_from_state`, `distributed.kde_binned_sharded_multi`) — kept
+    in one place so bit-parity claims across those paths reduce to "same
+    deposit, same grid".  Traced-h safe: `h` may be a device scalar sliced
+    from a shard_map input (the model-axis-sharded bandwidth sweep), and
+    every h op is jnp, so the traced program is identical regardless of
+    which chip holds which bandwidth — the foundation of the 2D-vs-1D-mesh
+    per-h bit equality.  `n` is the (possibly fractional, decayed)
+    normalizing row count.
+    """
+    smooth = _fft_smooth(grid, spacing, jnp.asarray(h, grid.dtype),
+                         grid_size, d)
+    out = gather_cic(smooth, query, lo, spacing, grid_size)
+    return jnp.maximum(out, 0.0) / (n * gaussian_norm(d, h))
+
+
 # ------------------------------------------------------------ deposit state --
 
 @jax.tree_util.register_pytree_node_class
@@ -344,10 +365,9 @@ def densities_from_state(state: DepositState, query: Array,
     d = state.lo.shape[0]
     grid = deposit_finalize(state)
     h = jnp.asarray(h, grid.dtype)
-    smooth = _fft_smooth(grid, state.spacing, h, state.grid_size, d)
-    out = gather_cic(smooth, query, state.lo, state.spacing, state.grid_size)
     n_eff = jnp.maximum(state.acc.rows.astype(grid.dtype), 1.0)
-    return jnp.maximum(out, 0.0) / (n_eff * gaussian_norm(d, h))
+    return smooth_gather(grid, query, h, lo=state.lo, spacing=state.spacing,
+                         grid_size=state.grid_size, d=d, n=n_eff)
 
 
 def kde_binned(
@@ -418,12 +438,9 @@ def kde_binned_multi(
                                    backend=backend, tile=tile,
                                    interpret=interpret,
                                    accumulator=accumulator)
-    outs = []
-    for h in hs:
-        smooth = _fft_smooth(grid, spacing, h, grid_size, d)
-        out = gather_cic(smooth, query, lo, spacing, grid_size)
-        outs.append(jnp.maximum(out, 0.0) / (n * gaussian_norm(d, h)))
-    return jnp.stack(outs)
+    return jnp.stack([smooth_gather(grid, query, h, lo=lo, spacing=spacing,
+                                    grid_size=grid_size, d=d, n=n)
+                      for h in hs])
 
 
 def default_grid_size(d: int) -> int:

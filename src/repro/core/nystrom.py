@@ -116,6 +116,31 @@ def _whitened_solve(g: Array, rhs: Array, evals: Array, evecs: Array,
     return w @ gamma
 
 
+def _whitened_solve_nlam(g: Array, rhs: Array, evals: Array, evecs: Array,
+                         g_max: Array, nlam: Array, jitter: float,
+                         eps: float) -> Array:
+    """`_whitened_solve` with the n*lam product passed as a DEVICE scalar.
+
+    The python-float path computes n*lam on the host and lets weak-type
+    promotion round it to the array dtype at the two use sites; passing
+    ``nlam = jnp.asarray(n * lam, g.dtype)`` reproduces exactly that
+    rounding, so this variant is bit-equal to `_whitened_solve` while being
+    traceable over lam — the form the model-sharded lam sweep
+    (`solve_normal_eq_multi`) and the vmapped many-model solve
+    (`solve_normal_eq_batched`) need.  ``eps`` is the already-scaled
+    noise-floor factor (float(finfo.eps) * eps_scale).
+    """
+    m = evals.shape[0]
+    tau = jnp.maximum(jitter * evals[-1], eps * g_max / nlam)
+    inv_sqrt = jnp.where(evals > tau, 1.0 / jnp.sqrt(jnp.maximum(evals, tau)),
+                         0.0)
+    w = evecs * inv_sqrt[None, :]                         # (m, m) whitener
+    a = w.T @ g @ w
+    b = w.T @ rhs
+    gamma = jnp.linalg.solve(a + nlam * jnp.eye(m, dtype=a.dtype), b)
+    return w @ gamma
+
+
 def solve_normal_eq(g: Array, rhs: Array, k_mm: Array, n: int, lam: float,
                     jitter: float = 1e-6, eps_scale: float = 1.0) -> Array:
     """beta = (G + n lam K_mm)^{-1} rhs via spectrally-truncated whitening.
@@ -163,13 +188,57 @@ def solve_normal_eq_multi(g: Array, rhs: Array, k_mm: Array, n: int,
     whitener — but the K_mm eigh and the G trace are lam-independent and run
     once.  Returns the (L, m) stack of betas, row i bit-equal to
     `solve_normal_eq(g, rhs, k_mm, n, lams[i])` (same op sequence).
+
+    Under an active 2D (data, model) mesh whose "models" rule divides L
+    (`repro.distributed.sharding`), the per-lam tails SHARD across the
+    model axis: the eigendecomposition stays replicated, each chip column
+    solves its L / M slice of the grid, and the stack reassembles
+    model-sharded — bit-equal per row to the 1D-data-mesh sweep because
+    the n*lam products are pre-rounded host-side (`_whitened_solve_nlam`)
+    and the per-lam op chain does not depend on how many lams a chip
+    holds.  (Mesh execution compiles the tail, so mesh runs differ from
+    the eager no-mesh loop by FMA-fusion rounding only.)
     """
+    from repro.distributed import sharding as shd
+
     evals, evecs = jnp.linalg.eigh(k_mm)
     g_max = jnp.trace(g)
+    lam_list = [float(lam) for lam in lams]
+    act = shd.active()
+    if act is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        # ANY active mesh routes through shard_map — a 1D data mesh runs
+        # the body replicated (model_axes None), so adding a model axis
+        # changes only how many lams each chip column holds, never the
+        # per-lam op chain: the 2D sweep is bit-equal per row to the 1D
+        # mesh sweep (locked in tests/test_mesh2d.py).  The NO-mesh path
+        # below keeps the historical eager loop (and its bit-locks against
+        # the single-lam solve, tests/test_calibrate.py).
+        model_axes = act.spec(("models",), (len(lam_list),))[0]
+        eps = float(jnp.finfo(g.dtype).eps) * eps_scale
+        # host-f64 n*lam products, rounded ONCE to the array dtype — the
+        # same values weak promotion produces inside `_whitened_solve`.
+        nlams = jnp.asarray([n * lam for lam in lam_list], g.dtype)
+
+        def body(nlams_loc, g_, rhs_, evals_, evecs_, g_max_):
+            return jnp.stack([
+                _whitened_solve_nlam(g_, rhs_, evals_, evecs_, g_max_,
+                                     nlams_loc[i], jitter, eps)
+                for i in range(nlams_loc.shape[0])])
+
+        rep = (g, rhs, evals, evecs, g_max)
+        return shard_map(
+            body, mesh=act.mesh,
+            in_specs=(P(model_axes),) + tuple(
+                P(*([None] * a.ndim)) for a in rep),
+            out_specs=P(model_axes) if model_axes is not None else P())(
+            nlams, *rep)
     return jnp.stack([
-        _whitened_solve(g, rhs, evals, evecs, g_max, n, float(lam), jitter,
+        _whitened_solve(g, rhs, evals, evecs, g_max, n, lam, jitter,
                         eps_scale)
-        for lam in lams])
+        for lam in lam_list])
 
 
 def fit_from_landmarks(
@@ -240,8 +309,8 @@ def _scan_steps(n: int, tile: int, x: Array,
 
 
 def _resolve_gram_exec(tile: int | None, precision: str | None, x: Array,
-                       xm: Array, backend: str | None, accumulator: str
-                       ) -> tuple[int | None, str]:
+                       xm: Array, backend: str | None, accumulator: str,
+                       num_models: int = 1) -> tuple[int | None, str]:
     """Resolve the Gram stream's (tile, precision) execution pair.
 
     ``tile=None`` -> the autotuned XLA engine tile (`repro.tuning` via
@@ -261,13 +330,14 @@ def _resolve_gram_exec(tile: int | None, precision: str | None, x: Array,
             precision = dispatch.resolve_plan(
                 "gram", n_loc, xm.shape[0], x.shape[1], dtype=x.dtype,
                 backend="pallas", accumulator=accumulator,
-                precision=None).precision
+                precision=None, num_models=num_models).precision
         return tile, precision
     if tile is None:
         plan = dispatch.resolve_plan("gram", n_loc, xm.shape[0], x.shape[1],
                                      dtype=x.dtype, backend="xla",
                                      accumulator=accumulator,
-                                     precision=precision)
+                                     precision=precision,
+                                     num_models=num_models)
         return plan.tile, (precision or plan.precision)
     return tile, (precision or "fp32")
 
@@ -297,7 +367,7 @@ def _apply_beta(k: Array, beta: Array, precision: str | None) -> Array:
 
 
 def _resolve_predict_tile(tile: int | None, x_new: Array, xm: Array,
-                          backend: str | None) -> int:
+                          backend: str | None, num_models: int = 1) -> int:
     """``tile=None`` -> the autotuned predict row tile (per-chip, like the
     gram resolution above; the tile slabs `streaming.tile_map` on every
     backend)."""
@@ -307,7 +377,7 @@ def _resolve_predict_tile(tile: int | None, x_new: Array, xm: Array,
     n_loc = max(1, x_new.shape[0] // streaming.row_shard_count(x_new.shape))
     return dispatch.resolve_tile("predict", n_loc, xm.shape[0],
                                  x_new.shape[1], dtype=x_new.dtype,
-                                 backend=backend)
+                                 backend=backend, num_models=num_models)
 
 
 def _gram_normal_eq(kernel: Kernel, x: Array, y: Array, xm: Array, *,
@@ -919,3 +989,215 @@ def predict_streaming(kernel: Kernel, fit_: NystromFit, x_new: Array,
 
     return streaming.mesh_map(local, x_new, (fit_.landmarks, fit_.beta),
                               out_rank=1)
+
+
+# ------------------------------------------------- many-model batched fits --
+
+class BatchedNystromFit(NamedTuple):
+    """B independent KRR models fit in one program (the many-tenant case).
+
+    Model b is the subset-of-regressors fit for (landmark set b, lam b,
+    response column b) — exactly what B separate `fit_streaming` calls
+    would produce, batched along a leading model axis that the "models"
+    sharding rule may split across a 2D mesh's model axis.
+    """
+
+    beta: Array          # (B, m)
+    landmarks: Array     # (B, m, d) per-model landmark inputs
+    landmark_idx: Array  # (B, m) indices into the training set
+    lams: Array          # (B,) per-model regularizers
+
+
+def _models_per_chip(num_models: int) -> int:
+    """Locally held model count once the "models" rule sharded the batch —
+    the `num_models` the tile planner must budget for
+    (`dispatch.resolve_plan(num_models=...)`: each tile step holds one
+    (tile, m) kernel slab per local model)."""
+    return max(1, num_models // streaming.model_shard_count(num_models))
+
+
+def solve_normal_eq_batched(gs: Array, rhss: Array, k_mms: Array, n: int,
+                            lams: Array, jitter: float = 1e-6,
+                            eps_scale: float = 1.0) -> Array:
+    """Per-model whitened solves over a leading model axis: (B, m) betas.
+
+    Unlike the lam sweep (`solve_normal_eq_multi`, which shares one
+    eigendecomposition), every model here owns its landmark set, so each
+    gets its own O(m^3) eigh — vmapped into one batched LAPACK/XLA call.
+    Under an active mesh whose "models" rule divides B the batch SHARDS
+    over the model axis (each chip column decomposes and solves only its
+    B / M models); otherwise the vmap runs replicated.  Model b matches
+    `solve_normal_eq(gs[b], rhss[b], k_mms[b], n, lams[b])` to reduction-
+    order tolerance (the n*lam product rounds on device here).
+    """
+    eps = float(jnp.finfo(gs.dtype).eps) * eps_scale
+    # n * lam in HOST float64, rounded once to the Gram dtype — the same
+    # rounding the scalar path's weak promotion applies (`_whitened_solve`
+    # with a python lam).  A device-side f32 product rounds differently at
+    # the ulp level, which is enough to flip the truncation threshold tau
+    # on near-threshold eigendirections and blow the per-model beta parity
+    import numpy as _np
+    nlams = jnp.asarray(
+        _np.asarray(n, _np.float64) * _np.asarray(jax.device_get(lams),
+                                                  _np.float64),
+        gs.dtype)
+
+    def batch(g_b, rhs_b, k_b, nlam_b):
+        def one(g, rhs, k_mm, nlam):
+            evals, evecs = jnp.linalg.eigh(k_mm)
+            return _whitened_solve_nlam(g, rhs, evals, evecs, jnp.trace(g),
+                                        nlam, jitter, eps)
+
+        return jax.vmap(one)(g_b, rhs_b, k_b, nlam_b)
+
+    mesh, model_axes = streaming._active_axes("models", (gs.shape[0],))
+    if mesh is None:
+        return batch(gs, rhss, k_mms, nlams)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    return shard_map(
+        batch, mesh=mesh,
+        in_specs=(P(model_axes), P(model_axes), P(model_axes),
+                  P(model_axes)),
+        out_specs=P(model_axes))(gs, rhss, k_mms, nlams)
+
+
+def fit_streaming_batched(
+    kernel: Kernel,
+    x: Array,
+    ys: Array,
+    lams: Array | Sequence[float] | float,
+    landmark_sets: Array,
+    *,
+    tile: int | None = None,
+    backend: str | None = None,
+    jitter: float = 1e-6,
+    weights: Array | None = None,
+    accumulator: str = "plain",
+    precision: str | None = None,
+) -> BatchedNystromFit:
+    """Fit B independent KRR models in ONE pass over the shared row stream.
+
+    The many-tenant shape: every model shares the input rows x but owns its
+    response column (``ys``: (B, n), or (n,) broadcast to all models), its
+    landmark set (``landmark_sets``: (B, m) indices into x) and its
+    regularizer (``lams``: scalar or (B,)).  A python loop over
+    `fit_streaming` would stream x B times; here the per-model normal
+    equations G_b = K_nm(b)^T K_nm(b), rhs_b = K_nm(b)^T y_b accumulate
+    through ONE `streaming.mesh_reduce` tile scan — each tile's rows are
+    loaded once and contracted against all locally held models (vmap over
+    the model axis inside the scan body), so the stream cost is paid once
+    and the arithmetic scales as B times the per-model contraction only.
+
+    Mesh semantics (`repro.distributed.sharding`): rows shard over "rows"
+    (data axis, psummed), models over "models" (model axis, independent) —
+    on a 2D (data, model) mesh a B=256 batch on M=16 model shards holds 16
+    models per chip column.  ``ys`` is the dual-sharded (rows, models)
+    operand (transposed internally); landmark sets and the per-model solves
+    (`solve_normal_eq_batched`) shard over the model axis.  With no mesh
+    (or a 1D data mesh) everything model-wise is replicated and only the
+    rows shard — the transparent-fallback contract.
+
+    ``weights`` ((B, m), optional) applies the without-replacement
+    importance correction per model (`weighted_normal_eq`).  The batched
+    stream always runs on the XLA engine (the Pallas gram kernel is
+    single-model; ``backend`` still steers tile planning), with the tile
+    planned against the widened m * B_loc slab
+    (`dispatch.resolve_plan(num_models=...)`).
+    Model b matches `fit_streaming(kernel, x, ys[b], lams[b],
+    landmark_sets[b])` to fp32 reduction-order tolerance (locked in
+    tests/test_mesh2d.py, benched in bench_pipeline --multimodel).
+    """
+    _require_sentinel_safe(kernel)
+    n, d = x.shape
+    landmark_sets = jnp.asarray(landmark_sets)
+    if landmark_sets.ndim != 2:
+        raise ValueError(f"landmark_sets must be (B, m) indices, got shape "
+                         f"{landmark_sets.shape}")
+    big, m = landmark_sets.shape
+    ys = jnp.asarray(ys, x.dtype)
+    if ys.ndim == 1:
+        ys = jnp.broadcast_to(ys[None, :], (big, n))
+    if ys.shape != (big, n):
+        raise ValueError(f"ys must be (B={big}, n={n}) or (n,), got "
+                         f"{ys.shape}")
+    lams = jnp.broadcast_to(jnp.asarray(lams, jnp.float32), (big,))
+    xms = jnp.take(x, landmark_sets, axis=0)              # (B, m, d)
+    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+
+    tile, precision = _resolve_gram_exec(tile, precision, x, xms[0], "xla",
+                                         accumulator,
+                                         num_models=_models_per_chip(big))
+    ys_t = ys.T.astype(acc_dtype)                         # (n, B) dual-shard
+
+    def local(x_loc, yst_loc, xms_loc):
+        b_loc = xms_loc.shape[0]
+
+        def emit(xt, yt):                                 # (t, d), (t, b_loc)
+            def one(xm_b, y_col):
+                k = kernel_matrix(kernel, xt, xm_b).astype(acc_dtype)
+                g = precision_mod.split_dot(k, k, (((0,), (0,)), ((), ())),
+                                            precision=precision,
+                                            acc=acc_dtype)
+                r = jax.lax.dot_general(k, y_col, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=acc_dtype)
+                return g, r
+
+            return jax.vmap(one, in_axes=(0, 1))(xms_loc, yt)
+
+        init = (jnp.zeros((b_loc, m, m), acc_dtype),
+                jnp.zeros((b_loc, m), acc_dtype))
+        return streaming.tile_reduce(emit, x_loc, (yst_loc,), tile=tile,
+                                     init=init, accumulator=accumulator,
+                                     pad="sentinel", finalize=False)
+
+    gs, rhss = streaming.mesh_reduce(local, (x,), model_args=(xms,),
+                                     row_model_args=(ys_t,),
+                                     accumulator=accumulator, finalize=True)
+    k_mms = jax.vmap(lambda xm: kernel_matrix(kernel, xm))(
+        xms).astype(acc_dtype)
+    if weights is not None:
+        gs, rhss, k_mms = jax.vmap(weighted_normal_eq)(
+            gs, rhss, k_mms, weights)
+    betas = solve_normal_eq_batched(
+        gs, rhss, k_mms, n, lams, jitter=jitter,
+        eps_scale=_eff_eps_scale(accumulator,
+                                 _scan_steps(n, tile, x, "xla"), precision))
+    if weights is not None:
+        betas = weights.astype(betas.dtype) * betas
+    return BatchedNystromFit(beta=betas, landmarks=xms,
+                             landmark_idx=landmark_sets, lams=lams)
+
+
+def predict_streaming_batched(kernel: Kernel, fit_: BatchedNystromFit,
+                              x_new: Array, *, tile: int | None = None,
+                              backend: str | None = None,
+                              precision: str | None = None) -> Array:
+    """Predict all B models on shared query rows in one pass: (B, n_new).
+
+    Unlike `predict_streaming_multi` (many betas, ONE landmark set) every
+    model here owns its landmarks, so each tile evaluates B_loc kernel
+    slabs — rows still stream once.  Mesh layout matches the batched fit:
+    rows shard over "rows", models over "models"
+    (`streaming.mesh_map(model_args=...)` — output dim 0 rides the model
+    axis, dim 1 the rows); no collective, predict is row-parallel per model.
+    """
+    _require_sentinel_safe(kernel)
+    xms, betas = fit_.landmarks, fit_.beta                # (B, m, d), (B, m)
+    big, m, d = xms.shape
+    tile = _resolve_predict_tile(tile, x_new, xms[0], backend,
+                                 num_models=_models_per_chip(big))
+
+    def local(x_loc, xms_loc, betas_loc):
+        def one(xt):                                      # (t, d) -> (t, B_loc)
+            def per_model(xm_b, beta_b):
+                k = kernel_matrix(kernel, xt, xm_b)
+                return _apply_beta(k, beta_b, precision)  # (t,)
+
+            return jax.vmap(per_model, in_axes=(0, 0),
+                            out_axes=1)(xms_loc, betas_loc)
+
+        return streaming.tile_map(one, x_loc, tile=tile).T
+
+    return streaming.mesh_map(local, x_new, model_args=(xms, betas),
+                              out_rank=2)

@@ -364,19 +364,44 @@ def tile_map(
 
 # -------------------------------------------------------------------- mesh --
 
-def _active_rows(shape):
-    """(mesh, rows_axes) when the active mesh's "rows" rule divides dim 0."""
+def _active_axes(rule: str, shape):
+    """(mesh, axes) when the active mesh's `rule` divides dim 0 of `shape`.
+
+    The generic resolver behind both logical stream axes this engine knows:
+    "rows" (the data/sample dim — reductions PSUM over it) and "models" (the
+    independent-work dim — h/lam candidates, per-tenant models — which
+    SHARDS, never reduces).  Under a 1D ("data",) mesh the "models" rule
+    resolves to None and every model-axis path degenerates to the
+    replicated 1D behavior.
+    """
     from repro.distributed import sharding as shd
     act = shd.active()
     if act is None:
         return None, None
-    axes = act.spec(("rows",) + (None,) * (len(shape) - 1), shape)[0]
+    axes = act.spec((rule,) + (None,) * (len(shape) - 1), shape)[0]
     return (act.mesh, axes) if axes is not None else (None, None)
+
+
+def _active_rows(shape):
+    """(mesh, rows_axes) when the active mesh's "rows" rule divides dim 0."""
+    return _active_axes("rows", shape)
 
 
 def _row_spec(axes, ndim: int):
     from jax.sharding import PartitionSpec as P
     return P(axes, *([None] * (ndim - 1)))
+
+
+def _axes_tuple(axes) -> tuple:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _mesh_axes_count(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    count = 1
+    for a in _axes_tuple(axes):
+        count *= sizes[a]
+    return count
 
 
 def row_shard_count(shape) -> int:
@@ -385,15 +410,23 @@ def row_shard_count(shape) -> int:
     — e.g. the scan-step count behind `eps_scale` — must divide by this:
     each chip streams only n/C rows, so a stream that is one tile PER CHIP
     has no cross-tile error to compensate even when the global n spans
-    several tiles."""
+    several tiles.  Counts DATA-axis shards only: under a 2D (data, model)
+    mesh the model axis replicates (or shards independent work), it never
+    splits the row stream, so it must not inflate the step budget."""
     mesh, axes = _active_rows(shape)
     if mesh is None:
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    count = 1
-    for a in (axes,) if isinstance(axes, str) else tuple(axes):
-        count *= sizes[a]
-    return count
+    return _mesh_axes_count(mesh, axes)
+
+
+def model_shard_count(num_models: int) -> int:
+    """How many chips the "models" rule splits an independent-work axis of
+    length `num_models` across (1 with no active mesh, a 1D data mesh, or a
+    non-dividing model axis)."""
+    mesh, axes = _active_axes("models", (num_models,))
+    if mesh is None:
+        return 1
+    return _mesh_axes_count(mesh, axes)
 
 
 def mesh_reduce(
@@ -401,6 +434,8 @@ def mesh_reduce(
     row_args: Sequence[Array],
     rep_args: Sequence[Array] = (),
     *,
+    model_args: Sequence[Array] = (),
+    row_model_args: Sequence[Array] = (),
     accumulator: str | Any = "plain",
     finalize: bool = True,
     init_state: Any = None,
@@ -408,12 +443,26 @@ def mesh_reduce(
 ) -> Any:
     """Row-sharded reduction: psum `local`'s accumulator state across chips.
 
-    ``local(*row_slabs, *rep_args)`` must return accumulator STATE (i.e. it
-    ran its own `tile_reduce`/backend kernel with ``finalize=False``).
-    Under an active mesh whose "rows" rule divides the leading dim, each
-    device reduces its local row slab and the state is psum-reduced — for
-    "compensated" the (hi, lo) pair crosses the collective un-collapsed.
-    Otherwise `local` runs once on the full arrays (transparent no-op).
+    ``local(*row_slabs, *row_model_slabs, *model_slabs, *rep_args)`` must
+    return accumulator STATE (i.e. it ran its own `tile_reduce`/backend
+    kernel with ``finalize=False``).  Under an active mesh whose "rows"
+    rule divides the leading dim, each device reduces its local row slab
+    and the state is psum-reduced — for "compensated" the (hi, lo) pair
+    crosses the collective un-collapsed.  Otherwise `local` runs once on
+    the full arrays (transparent no-op).
+
+    2D (data x model) meshes: the psum covers the DATA axes only — the
+    model axis shards independent work instead of reducing.  ``model_args``
+    are sharded over the "models" rule on their leading dim (per-model
+    landmark sets, per-model scalars); ``row_model_args`` are (rows,
+    models)-shaped and shard BOTH ways (per-tenant responses riding the
+    shared row stream).  When model args are present every leaf of the
+    returned state must carry the model axis as its LEADING dim — the
+    output stays model-sharded (out spec P(model_axes)) and assembles to
+    the full (models, ...) stack, already psummed over data.  With no
+    "models"-mapped mesh axis (a 1D data mesh) the model args are simply
+    replicated and `local` computes every model — the transparent-fallback
+    contract the bit-parity tests lock.
 
     ``init_state=`` is a prior raw state merged in AFTER the collective
     (threading it through the psum would multiply the replicated prior by
@@ -424,18 +473,31 @@ def mesh_reduce(
 
     acc = get(accumulator)
     mesh, axes = _active_rows(row_args[0].shape)
+    model_axes = None
+    if model_args or row_model_args:
+        probe = model_args[0].shape if model_args else (
+            row_model_args[0].shape[1],)
+        m_mesh, model_axes = _active_axes("models", tuple(probe[:1]))
+        if mesh is None and m_mesh is not None:
+            mesh = m_mesh      # model-only sharding (rows fell back local)
     if mesh is None:
-        state = local(*row_args, *rep_args)
+        state = local(*row_args, *row_model_args, *model_args, *rep_args)
     else:
-        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        ax_tuple = _axes_tuple(axes) if axes is not None else ()
 
         def body(*args):
-            return acc.psum(local(*args), ax_tuple)
+            out = local(*args)
+            return acc.psum(out, ax_tuple) if ax_tuple else out
 
-        in_specs = tuple(_row_spec(axes, a.ndim) for a in row_args) + tuple(
-            P(*([None] * a.ndim)) for a in rep_args)
-        state = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P())(
-            *row_args, *rep_args)
+        in_specs = (
+            tuple(_row_spec(axes, a.ndim) for a in row_args)
+            + tuple(P(axes, model_axes) for a in row_model_args)
+            + tuple(_row_spec(model_axes, a.ndim) for a in model_args)
+            + tuple(P(*([None] * a.ndim)) for a in rep_args))
+        out_specs = P(model_axes) if model_axes is not None else P()
+        state = shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)(
+            *row_args, *row_model_args, *model_args, *rep_args)
     if init_state is not None:
         state = acc.merge(init_state, state)
     if return_state:
@@ -448,6 +510,7 @@ def mesh_map(
     x: Array,
     rep_args: Sequence[Array] = (),
     *,
+    model_args: Sequence[Array] = (),
     out_rank: int = 1,
 ) -> Array:
     """Row-sharded map: `local(x_loc, *rep_args)` -> (n_loc, ...) per chip.
@@ -455,14 +518,30 @@ def mesh_map(
     Embarrassingly row-parallel (no collective); `out_rank` is the rank of
     local's output, whose leading dim stays row-sharded.  With no active
     mesh (or a non-dividing axis) this is `local(x, *rep_args)`.
+
+    With ``model_args`` (leading-dim model-sharded, like `mesh_reduce`) the
+    call signature becomes ``local(x_loc, *model_slabs, *rep_args)`` and
+    the output is (models_loc, rows_loc, ...): dim 0 rides the model axis,
+    dim 1 the rows — the batched-predict layout.  On a 1D data mesh the
+    model args replicate and dim 0 is the full model axis.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     mesh, axes = _active_rows(x.shape)
+    model_axes = None
+    if model_args:
+        m_mesh, model_axes = _active_axes("models", model_args[0].shape)
+        if mesh is None and m_mesh is not None:
+            mesh = m_mesh
     if mesh is None:
-        return local(x, *rep_args)
-    in_specs = (_row_spec(axes, x.ndim),) + tuple(
-        P(*([None] * a.ndim)) for a in rep_args)
+        return local(x, *model_args, *rep_args)
+    in_specs = ((_row_spec(axes, x.ndim),)
+                + tuple(_row_spec(model_axes, a.ndim) for a in model_args)
+                + tuple(P(*([None] * a.ndim)) for a in rep_args))
+    if model_args:
+        out_specs = P(model_axes, axes, *([None] * (out_rank - 2)))
+    else:
+        out_specs = _row_spec(axes, out_rank)
     return shard_map(local, mesh=mesh, in_specs=in_specs,
-                     out_specs=_row_spec(axes, out_rank))(x, *rep_args)
+                     out_specs=out_specs)(x, *model_args, *rep_args)

@@ -32,6 +32,7 @@ _state = threading.local()
 DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
     "batch": ("pod", "data"),
     "rows": ("data",),      # KRR sample dim (streaming Nystrom / pipeline)
+    "models": ("model",),   # independent-work dim: h/lam candidates, tenants
     "seq": None,            # activation sequence dim (sharded only for SP configs)
     "seq_kv": ("data",),    # KV-cache / SSM-state sequence dim for long decode
     "embed": ("data",),     # FSDP axis for weights' d_model dim

@@ -55,7 +55,8 @@ def kernel_matrix(kernel: core_kernels.Kernel, x: Array,
 def resolve_plan(op: str, n: int, m: int, d: int, *,
                  dtype=None, backend: str | None = None,
                  accumulator: str = "plain",
-                 precision: str | None = "fp32"):
+                 precision: str | None = "fp32",
+                 num_models: int = 1):
     """Autotuned execution plan for a streamed op (`repro.tuning`).
 
     This is THE boundary where ``tile=None`` (and Pallas bm/bn defaults)
@@ -66,11 +67,21 @@ def resolve_plan(op: str, n: int, m: int, d: int, *,
     op(tile=plan.tile).  ``precision=None`` (gram only) asks the model to
     resolve the (tile, precision) pair JOINTLY: the plan's ``precision``
     field then carries the chosen Gram-contraction mode.
+
+    ``num_models`` widens the landmark block for MANY-MODEL batched
+    streams (`repro.core.nystrom.fit_streaming_batched`): each tile step
+    there materializes one (tile, m) kernel slab PER locally held model —
+    the same transient footprint as a single (tile, m * num_models) slab —
+    so the planner must budget against the widened block or the batched
+    scan would pick a tile sized for one model and blow the slab budget
+    num_models-fold.  Pass the PER-CHIP model count (after model-axis
+    sharding), not the global batch.
     """
     import jax.numpy as jnp
 
     from repro import tuning
-    return tuning.plan_for(op, int(n), int(m), int(d),
+    return tuning.plan_for(op, int(n), int(m) * max(1, int(num_models)),
+                           int(d),
                            dtype=dtype if dtype is not None else jnp.float32,
                            backend=resolve(backend), accumulator=accumulator,
                            precision=precision)
@@ -79,11 +90,13 @@ def resolve_plan(op: str, n: int, m: int, d: int, *,
 def resolve_tile(op: str, n: int, m: int, d: int, *,
                  dtype=None, backend: str | None = None,
                  accumulator: str = "plain",
-                 precision: str | None = "fp32") -> int:
+                 precision: str | None = "fp32",
+                 num_models: int = 1) -> int:
     """`resolve_plan(...).tile` — the engine-tile shorthand the streaming
     entry points (`repro.core.nystrom`) use for their ``tile=None``."""
     return resolve_plan(op, n, m, d, dtype=dtype, backend=backend,
-                        accumulator=accumulator, precision=precision).tile
+                        accumulator=accumulator, precision=precision,
+                        num_models=num_models).tile
 
 
 def gram_accumulate(kernel: core_kernels.Kernel, x: Array, y: Array,

@@ -166,7 +166,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str | None,
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "status": "skipped", "reason": reason}
     cfg = serve_dtype(cfg, shape)
-    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_name == "multi"))
+    mesh = mesh_lib.make_production_mesh(
+        multi_pod=(mesh_name == "multi"),
+        num_devices=512 if mesh_name == "multi" else 256)
     chips = mesh.devices.size
     rules = rules_for(shape, cfg)
     tag = ""
@@ -231,7 +233,9 @@ def run_krr_cell(mesh_name: str, out_dir: str | None, n: int = 1 << 24,
                  d: int = 3, kde_method: str = "direct") -> dict:
     """Dry-run the paper's own pipeline (core/distributed.py) on the mesh."""
     from repro.core import distributed as D
-    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_name == "multi"))
+    mesh = mesh_lib.make_production_mesh(
+        multi_pod=(mesh_name == "multi"),
+        num_devices=512 if mesh_name == "multi" else 256)
     chips = mesh.devices.size
     m = int(5 * n ** (1.0 / 3.0))
     m_kde = max(1024, int(n ** 0.5))

@@ -20,6 +20,8 @@ from repro.pipeline.online import (  # noqa: F401
     OnlineState,
 )
 from repro.pipeline.stages import (  # noqa: F401
+    BatchedSampleStage,
+    BatchedSolveStage,
     CalibrateStage,
     DensityStage,
     FixedLandmarkStage,

@@ -100,6 +100,11 @@ class PipelineConfig:
     lam_grid: tuple[float, ...] | None = None
     h_grid: tuple[float, ...] | None = None
     calibrate_val_fraction: float = 0.2    # holdout share of the one CV fold
+    # k-fold selection: 1 keeps the historical single holdout fold
+    # bit-for-bit; k > 1 runs the shared-Gram sweep once per fold and
+    # averages the per-candidate val MSE (k x the cost, k x lower selection
+    # variance — the fold axis rides the same multi-lam machinery)
+    calibrate_folds: int = 1
     # sampling
     sample_with_replacement: bool = False  # paper Thm 2 iid mode when True
     # execution
@@ -196,6 +201,7 @@ class PipelineState:
     bandwidth: Optional[float] = None       # calibrated KDE h (CalibrateStage)
     cv_scores: Optional[list] = None        # per-(lam, h) candidate records
     cv_best: Optional[dict] = None          # winning candidate summary
+    batched_fit: Optional[nystrom.BatchedNystromFit] = None  # fit_many
 
 
 class SAKRRPipeline:
@@ -236,7 +242,7 @@ class SAKRRPipeline:
             seconds=ctx.seconds, sample_weights=ctx.sample_weights,
             predictions=ctx.predictions, scores=ctx.scores,
             bandwidth=ctx.bandwidth, cv_scores=ctx.cv_scores,
-            cv_best=ctx.cv_best)
+            cv_best=ctx.cv_best, batched_fit=ctx.batched_fit)
 
     def _run(self, stage_list: Sequence[stages_mod.Stage],
              ctx: stages_mod.StageContext) -> None:
@@ -255,6 +261,80 @@ class SAKRRPipeline:
         self._run(self.stages, ctx)
         self._snapshot(ctx)
         return self
+
+    # ------------------------------------------------------------- fit_many --
+    def fit_many(self, x: Array, ys: Array, *,
+                 lams: Array | Sequence[float] | float | None = None,
+                 share_landmarks: bool = False) -> "SAKRRPipeline":
+        """Fit MANY tenant models over ONE shared x tile stream.
+
+        `ys` is (B, n) — B target vectors over the same design `x` — and
+        `lams` an optional (B,) per-model regularization (scalar / None
+        broadcasts; None means the config/paper-rate lam).  The shared
+        KDE -> leverage front end runs ONCE; `stages.BatchedSampleStage`
+        draws B landmark sets from the one leverage distribution (ONE set
+        when ``share_landmarks=True``), and `stages.BatchedSolveStage` ->
+        `nystrom.fit_streaming_batched` accumulates all B normal equations
+        in one pass over the x tiles — the per-tile cross-kernel block is
+        the dominant cost and is paid once per model only in FLOPs, never
+        in data movement.  Under a 2D (data x model) mesh the model axis
+        shards the B models; see pipeline/README.md "Meshes & many-model
+        batching".
+
+        The batched artifact lands on `state.batched_fit`; serve it with
+        `predict_many`.
+        """
+        ys = jax.numpy.asarray(ys)
+        if ys.ndim == 1:
+            raise ValueError(
+                f"fit_many wants ys of shape (num_models, n); got "
+                f"{ys.shape} — use fit() for a single model")
+        ctx = self._make_context(x, ys[0])
+        ctx.ys = ys
+        if lams is not None:
+            ctx.lams = jax.numpy.broadcast_to(
+                jax.numpy.asarray(lams, jax.numpy.float32),
+                (int(ys.shape[0]),))
+        # reuse the fitted front end (custom density/leverage stages keep
+        # their overrides); the single-model sample/solve/... tail is
+        # replaced by the batched pair
+        prefix = []
+        for s in self.stages:
+            if getattr(s, "name", "") in ("sample", "solve", "predict",
+                                          "score", "calibrate"):
+                break
+            prefix.append(s)
+        if not prefix:
+            prefix = [stages_mod.DensityStage(), stages_mod.LeverageStage()]
+        solve = self._solve_stage()
+        stage_list = prefix + [
+            stages_mod.BatchedSampleStage(
+                share_landmarks=share_landmarks,
+                with_replacement=self.config.sample_with_replacement),
+            stages_mod.BatchedSolveStage(
+                backend=self._predict_backend(), tile=self._predict_tile(),
+                weighted=solve.weighted if solve is not None else False,
+                accumulator=solve.accumulator if solve is not None else None,
+                precision=self._solve_precision())]
+        self._run(stage_list, ctx)
+        self._snapshot(ctx)
+        return self
+
+    def predict_many(self, x_new: Array, tile: int | None = None) -> Array:
+        """(B, n_new) predictions from the `fit_many` artifact — one x_new
+        tile stream feeds every model's landmark block (model-axis-sharded
+        under a 2D mesh)."""
+        st = self._fitted_state()
+        if st.batched_fit is None:
+            raise RuntimeError("call fit_many(x, ys) before predict_many()")
+        t0 = time.perf_counter()
+        preds = nystrom.predict_streaming_batched(
+            self.kernel, st.batched_fit, jax.numpy.asarray(x_new),
+            tile=self._predict_tile(tile), backend=self._predict_backend(),
+            precision=self._solve_precision())
+        jax.block_until_ready(preds)
+        st.seconds["predict_many"] = time.perf_counter() - t0
+        return preds
 
     # ---------------------------------------------------------- partial_fit --
     @property

@@ -89,6 +89,15 @@ class StageContext:
     # deferred), so `SAKRRPipeline.partial_fit` can absorb new tiles and
     # re-solve in O(tile * m) without ever re-streaming the old rows
     solve_state: Optional[nystrom.NormalEqState] = None
+    # many-model batched fits (SAKRRPipeline.fit_many): B tenant models
+    # sharing the row stream — per-model responses / regularizers /
+    # landmark sets ride a leading model axis that the "models" sharding
+    # rule may split across a 2D (data, model) mesh
+    ys: Optional[Array] = None              # (B, n) per-model responses
+    lams: Optional[Array] = None            # (B,) per-model regularizers
+    landmark_sets: Optional[Array] = None   # (B, m) per-model landmark idx
+    batch_weights: Optional[Array] = None   # (B, m) importance weights
+    batched_fit: Optional["nystrom.BatchedNystromFit"] = None
     seconds: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def require(self, *names: str) -> None:
@@ -324,6 +333,93 @@ class SolveStage(Stage):
             accumulator=accumulator, precision=precision, return_state=True)
 
 
+class BatchedSampleStage(Stage):
+    """Per-model landmark draws for the many-model fold (`fit_many`).
+
+    Every model draws its own landmark set from the SHARED leverage
+    distribution (the models share x, so they share densities/leverage);
+    the draws are vectorized — one (B, n) Gumbel field, vmapped top-k —
+    instead of B python-level sampling calls.  ``share_landmarks=True``
+    broadcasts ONE draw to every model (cheaper downstream Grams when
+    tenants may share a dictionary); the default keeps per-model draws so
+    tenant models stay independently sampled.  Weights follow SampleStage:
+    inverse-inclusion importance weights for the without-replacement
+    default, none for the with-replacement (paper Thm 2) mode.
+    """
+
+    name = "sample"
+    requires = ("leverage", "ys")
+    provides = ("landmark_sets",)
+
+    def __init__(self, *, share_landmarks: bool = False,
+                 with_replacement: bool | None = None):
+        self.share_landmarks = share_landmarks
+        self.with_replacement = with_replacement
+
+    def run(self, ctx: StageContext) -> None:
+        cfg = ctx.config
+        probs = ctx.leverage.probs
+        big = int(ctx.ys.shape[0])
+        m = min(ctx.num_landmarks, ctx.n)
+        key = jax.random.PRNGKey(cfg.seed)
+        with_rep = (self.with_replacement if self.with_replacement is not None
+                    else cfg.sample_with_replacement) or ctx.num_landmarks > ctx.n
+        if self.share_landmarks:
+            if with_rep:
+                idx = sampling.sample_with_replacement(key, probs, m)
+                weights = None
+            else:
+                idx, weights = sampling.sample_weighted_without_replacement(
+                    key, probs, m)
+            ctx.landmark_sets = jnp.broadcast_to(idx[None, :], (big, m))
+            ctx.batch_weights = (None if weights is None else
+                                 jnp.broadcast_to(weights[None, :], (big, m)))
+            return
+        if with_rep:
+            keys = jax.random.split(key, big)
+            ctx.landmark_sets = jax.vmap(
+                lambda k: sampling.sample_with_replacement(k, probs, m))(keys)
+            ctx.batch_weights = None
+            return
+        race_dtype = jnp.promote_types(ctx.x.dtype, jnp.float32)
+        races = jax.random.gumbel(key, (big, ctx.n), dtype=race_dtype)
+        ctx.landmark_sets, ctx.batch_weights = jax.vmap(
+            lambda g: sampling.sample_weighted_without_replacement(
+                key, probs, m, gumbel=g))(races)
+
+
+class BatchedSolveStage(Stage):
+    """B independent normal-equation fits off ONE shared row stream
+    (`nystrom.fit_streaming_batched`): per-model (y, lam, landmark set),
+    rows psummed over the data axis, models sharded over the model axis of
+    a 2D mesh.  Execution knobs follow the SolveStage convention (stage
+    constructor beats config); ``weighted=True`` applies the per-model
+    importance weights banked by BatchedSampleStage."""
+
+    name = "solve"
+    requires = ("landmark_sets", "ys")
+    provides = ("batched_fit",)
+
+    def __init__(self, *, backend: str | None = None, tile: int | None = None,
+                 weighted: bool = False, accumulator: str | None = None,
+                 precision: str | None = None):
+        self.backend = backend
+        self.tile = tile
+        self.weighted = weighted
+        self.accumulator = accumulator
+        self.precision = precision
+
+    def run(self, ctx: StageContext) -> None:
+        cfg = ctx.config
+        backend, tile, accumulator, precision = resolve_exec(self, cfg)
+        lams = ctx.lams if ctx.lams is not None else ctx.lam
+        weights = ctx.batch_weights if self.weighted else None
+        ctx.batched_fit = nystrom.fit_streaming_batched(
+            ctx.kernel, ctx.x, ctx.ys, lams, ctx.landmark_sets,
+            tile=tile, backend=backend, jitter=cfg.jitter, weights=weights,
+            accumulator=accumulator, precision=precision)
+
+
 class PredictStage(Stage):
     """Batched predictions at `x_eval` (default: in-sample, ctx.x) through
     `nystrom.predict_streaming` — O(tile * m) per batch, row-sharded under
@@ -494,12 +590,14 @@ class CalibrateStage(Stage):
     def __init__(self, *, lam_grid: Sequence[float] | None = None,
                  h_grid: Sequence[float] | None = None,
                  val_fraction: float | None = None,
+                 folds: int | None = None,
                  backend: str | None = None, tile: int | None = None,
                  weighted: bool = False, accumulator: str | None = None,
                  precision: str | None = None):
         self.lam_grid = lam_grid
         self.h_grid = h_grid
         self.val_fraction = val_fraction
+        self.folds = folds
         self.backend = backend
         self.tile = tile
         self.weighted = weighted
@@ -542,6 +640,43 @@ class CalibrateStage(Stage):
                                       ctx.n)
         return perm[n_val:], perm[:n_val]
 
+    def _folds(self, ctx: StageContext) -> list[tuple[Array, Array]]:
+        """The fold list: k == 1 (the default) reproduces the historical
+        holdout split bit-for-bit; k > 1 slices ONE deterministic
+        permutation into k equal validation blocks (remainder rows stay on
+        every fold's train side), each train side shrunk to divide an
+        active mesh exactly like `_split`.  k-fold selection runs the
+        shared-Gram sweep k times — k× the cost for k× lower selection
+        variance, the fold axis riding the same multi-lam machinery."""
+        from repro.distributed import sharding as shd
+        cfg = ctx.config
+        k = (self.folds if self.folds is not None
+             else getattr(cfg, "calibrate_folds", 1))
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"calibrate folds must be >= 1, got {k}")
+        if k == 1:
+            return [self._split(ctx)]
+        if k > ctx.n:
+            raise ValueError(f"cannot make {k} folds from {ctx.n} rows")
+        perm = jax.random.permutation(jax.random.PRNGKey(cfg.seed ^ 0x5EED),
+                                      ctx.n)
+        fs = ctx.n // k
+        act = shd.active()
+        folds: list[tuple[Array, Array]] = []
+        for j in range(k):
+            val = perm[j * fs:(j + 1) * fs]
+            tr = jnp.concatenate([perm[:j * fs], perm[(j + 1) * fs:]])
+            if act is not None:
+                size = act.mesh.devices.size
+                n_tr = int(tr.shape[0])
+                if n_tr > size and n_tr % size:
+                    extra = n_tr % size
+                    val = jnp.concatenate([val, tr[:extra]])
+                    tr = tr[extra:]
+            folds.append((tr, val))
+        return folds
+
     def _densities_multi(self, ctx: StageContext, x_tr: Array,
                          h_grid: list[float]) -> Array:
         """(H, n_tr) densities at every bandwidth, one deposit (+ one psum
@@ -568,10 +703,16 @@ class CalibrateStage(Stage):
                                     accumulator=accumulator)
 
     # ---------------------------------------------------------------- run --
-    def run(self, ctx: StageContext) -> None:
+    def _run_fold(self, ctx: StageContext, lam_grid: list[float],
+                  h_grid: list[float], tr_idx: Array, val_idx: Array,
+                  tag: str, fold: int) -> tuple[np.ndarray, list[float],
+                                                list[float]]:
+        """One fold of the (h, lam) sweep: shared deposit, per-h Gram
+        re-solved per lam, one fused validation stream.  Returns the fold's
+        (H, L) val-MSE matrix and per-h fit/block seconds; per-h wall-clock
+        lands in ctx.seconds keyed with `tag` ("" for the single-fold
+        sweep — the historical keys — "fJ|" under k-fold)."""
         cfg = ctx.config
-        lam_grid, h_grid = self._grids(ctx)
-        tr_idx, val_idx = self._split(ctx)
         x_tr, y_tr = ctx.x[tr_idx], ctx.y[tr_idx]
         x_val, y_val = ctx.x[val_idx], ctx.y[val_idx]
         n_tr = int(x_tr.shape[0])
@@ -583,6 +724,8 @@ class CalibrateStage(Stage):
         kde_s = time.perf_counter() - t0
 
         key = jax.random.PRNGKey(cfg.seed)
+        if tag:   # k-fold: each fold draws its own race/landmarks
+            key = jax.random.fold_in(key, fold)
         # ONE Gumbel race for the whole bandwidth grid: every h's landmark
         # draw perturbs its own probs with the SAME noise, so the h axis of
         # the sweep carries zero sampling noise (drawn once here instead of
@@ -616,9 +759,9 @@ class CalibrateStage(Stage):
             jax.block_until_ready(fits[0].beta)
             fit_s = time.perf_counter() - t1
             h_s = time.perf_counter() - t_h
-            sec_key = f"calibrate[h={h:.3g}]"
+            sec_key = f"calibrate[{tag}h={h:.3g}]"
             if sec_key in ctx.seconds:   # grid values equal at 3 sig figs
-                sec_key = f"calibrate[h={h:.3g}#{i}]"
+                sec_key = f"calibrate[{tag}h={h:.3g}#{i}]"
             ctx.seconds[sec_key] = h_s
             fits_by_h.append(fits)
             fit_seconds.append(fit_s)
@@ -631,7 +774,25 @@ class CalibrateStage(Stage):
             [ctx.kernel] * len(h_grid), fits_by_h, x_val, y_val,
             tile=tile, backend=backend, precision=precision)
         val_mse_hl = np.asarray(jax.block_until_ready(val_mse_hl))
-        ctx.seconds["calibrate[val]"] = time.perf_counter() - t_val
+        ctx.seconds[f"calibrate[{tag}val]"] = time.perf_counter() - t_val
+        ctx.seconds[f"calibrate[{tag}kde]"] = kde_s
+        return val_mse_hl, fit_seconds, h_seconds
+
+    def run(self, ctx: StageContext) -> None:
+        lam_grid, h_grid = self._grids(ctx)
+        folds = self._folds(ctx)
+        k = len(folds)
+        total = np.zeros((len(h_grid), len(lam_grid)))
+        fit_seconds = np.zeros(len(h_grid))
+        h_seconds = np.zeros(len(h_grid))
+        for j, (tr_idx, val_idx) in enumerate(folds):
+            tag = "" if k == 1 else f"f{j}|"
+            mse_hl, fit_s, h_s = self._run_fold(ctx, lam_grid, h_grid,
+                                                tr_idx, val_idx, tag, j)
+            total += mse_hl
+            fit_seconds += np.asarray(fit_s)
+            h_seconds += np.asarray(h_s)
+        val_mse_hl = total / k
         records: list[dict] = []
         for i, h in enumerate(h_grid):
             for j, lam in enumerate(lam_grid):
@@ -639,9 +800,9 @@ class CalibrateStage(Stage):
                 records.append({
                     "h": float(h), "lam": float(lam), "val_mse": mse,
                     "val_rmse": mse ** 0.5,
-                    "fit_seconds": round(fit_seconds[i], 4),
-                    "h_block_seconds": round(h_seconds[i], 4), "best": False})
-        ctx.seconds["calibrate[kde]"] = kde_s
+                    "fit_seconds": round(float(fit_seconds[i]), 4),
+                    "h_block_seconds": round(float(h_seconds[i]), 4),
+                    "best": False})
 
         # non-finite val_mse (a diverged candidate) must never win min():
         # NaN compares False against everything, so key on finiteness first
@@ -650,7 +811,7 @@ class CalibrateStage(Stage):
         best["best"] = True
         ctx.cv_scores = records
         ctx.cv_best = {"lam": best["lam"], "bandwidth": best["h"],
-                       "val_mse": best["val_mse"]}
+                       "val_mse": best["val_mse"], "folds": k}
         # rewrite the downstream knobs: the full-data refit (DensityStage
         # onward) now runs at the calibrated candidate
         ctx.lam = best["lam"]
@@ -658,6 +819,7 @@ class CalibrateStage(Stage):
         ctx.densities = ctx.leverage = ctx.landmark_idx = None
         ctx.sample_weights = ctx.fit = ctx.predictions = ctx.scores = None
         ctx.score_moments = ctx.solve_state = None
+        ctx.landmark_sets = ctx.batch_weights = ctx.batched_fit = None
 
 
 def default_stages(config: Any = None) -> list[Stage]:
